@@ -1,0 +1,61 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run's compiled artifacts (results/dryrun.json).
+
+  compute_s    = HLO_FLOPs_per_device / 197e12
+  memory_s     = HLO_bytes_per_device / 819e9
+  collective_s = per-chip collective link bytes / 50e9
+
+plus MODEL_FLOPS/HLO_FLOPs (the useful-compute ratio that exposes remat and
+replicated-compute waste) and the dominant term.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import Row
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS = Path("results/dryrun.json")
+
+
+def rows_from_results(path: Path = RESULTS) -> List[Row]:
+    if not path.exists():
+        return [Row("roofline/missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all")]
+    data = json.loads(path.read_text())
+    rows: List[Row] = []
+    for key in sorted(data):
+        rec = data[key]
+        name = f"roofline/{key.replace('|', '/')}"
+        if rec.get("status") == "skip":
+            rows.append(Row(name, 0.0, f"SKIP:{rec['reason']}"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(Row(name, 0.0, f"ERROR:{rec.get('error', '?')}"))
+            continue
+        h = rec["hlo"]
+        n_dev = rec["n_devices"]
+        comp = h["flops"] / PEAK_FLOPS
+        mem = h["hbm_bytes"] / HBM_BW
+        coll = h["total_coll_link_bytes"] / ICI_BW
+        mem_floor = rec.get("analytic_bytes_per_device", 0.0) / HBM_BW
+        bound = max(comp, mem, coll)
+        dom = {comp: "compute", mem: "memory", coll: "collective"}[bound]
+        bound_att = max(comp, mem_floor, coll)
+        useful = rec["model_flops_global"] / n_dev
+        ratio = useful / h["flops"] if h["flops"] else 0.0
+        frac = (useful / PEAK_FLOPS) / bound if bound else 0.0
+        frac_att = (useful / PEAK_FLOPS) / bound_att if bound_att else 0.0
+        rows.append(Row(
+            name, bound * 1e6,
+            f"compute_s={comp:.3e} memory_s={mem:.3e} "
+            f"memory_floor_s={mem_floor:.3e} collective_s={coll:.3e} "
+            f"dominant={dom} model/hlo_flops={ratio:.3f} "
+            f"roofline_frac={frac:.4f} attainable_frac={frac_att:.4f}"))
+    return rows
+
+
+def run() -> List[Row]:
+    return rows_from_results()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig5 roofline
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+BENCHES = ("table1", "fig3", "fig4", "fig5", "scrub", "roofline")
+
+
+def _load(name: str):
+    if name == "table1":
+        from benchmarks import table1_techniques as m
+    elif name == "fig3":
+        from benchmarks import fig3_app_vulnerability as m
+    elif name == "fig4":
+        from benchmarks import fig4_region_vulnerability as m
+    elif name == "fig5":
+        from benchmarks import fig5_cost_availability as m
+    elif name == "scrub":
+        from benchmarks import scrub_overhead as m
+    elif name == "roofline":
+        from benchmarks import roofline as m
+    else:
+        raise KeyError(name)
+    return m
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        try:
+            for row in _load(name).run():
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/FAILED,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Scrub/encode overhead vs training step time — the performance dimension
+the paper's §1 raises (error handling must not cost 2000x a memory access).
+
+Measures one train step of the lm-100m example model vs SEC-DED
+encode/scrub passes over its parameters at several scrub strides, and
+derives the steady-state overhead % for a given scrub interval.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import Row, time_call
+from repro.configs import get_tiny
+from repro.configs.base import ShapeSpec, TrainConfig
+from repro.core import Scrubber, state_bytes, typical_server
+from repro.data.synthetic import make_batch
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+def run() -> List[Row]:
+    cfg = get_tiny("lm-100m").replace(n_layers=4, d_model=256, d_ff=1024,
+                                      vocab_size=8192)
+    tcfg = TrainConfig(remat="none")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    batch = make_batch(cfg, ShapeSpec("b", 128, 8, "train"))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    us_step = time_call(lambda: step(state, batch)[1]["loss"], iters=3)
+
+    rows = [Row("scrub/train_step", us_step,
+                f"params_bytes={state_bytes(state['params'])}")]
+    pol = typical_server()
+    scrubber = Scrubber.create(state["params"], pol)
+    us_scrub = time_call(lambda: scrubber.scrub_now(state["params"])[0],
+                         warmup=1, iters=3)
+    rows.append(Row("scrub/full_pass", us_scrub,
+                    f"ratio_vs_step={us_scrub / us_step:.3f}"))
+    for interval in (10, 50, 100):
+        ov = us_scrub / (us_step * interval)
+        rows.append(Row(f"scrub/overhead_interval_{interval}", 0.0,
+                        f"steady_state_overhead={ov:.4%}"))
+    for stride in (2, 4):
+        s2 = Scrubber.create(state["params"], pol, stride=stride)
+        us_s = time_call(lambda: s2.scrub_now(state["params"])[0],
+                         warmup=1, iters=3)
+        rows.append(Row(f"scrub/stride_{stride}", us_s,
+                        f"fraction_of_full={us_s / us_scrub:.3f}"))
+    return rows

@@ -1,0 +1,32 @@
+"""Heterogeneous-Reliability Memory (HRM) — the paper's contribution as a
+composable JAX module: tiers, policies, sidecar ECC, scrubbing, recovery,
+error injection/characterization, and the cost/availability models."""
+from repro.core.autopolicy import (  # noqa: F401
+    AutoPolicyResult, tune_policy, vuln_from_campaign,
+)
+from repro.core.availability import (  # noqa: F401
+    AvailabilityResult, VulnProfile, WEBSEARCH_VULN, evaluate_availability,
+    paper_design_availability,
+)
+from repro.core.characterize import (  # noqa: F401
+    CampaignResult, lm_eval_fn, run_campaign,
+)
+from repro.core.costmodel import (  # noqa: F401
+    DesignPointCost, RegionProfile, WEBSEARCH, paper_design_costs,
+    policy_cost_saving, region_fractions,
+)
+from repro.core.errormodel import ErrorModel, InjectionPlan  # noqa: F401
+from repro.core.injection import Injector  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    DESIGN_POINTS, HRMPolicy, REGIONS, classify_path, consumer_pc,
+    detect_recover, detect_recover_l, less_tested, typical_server,
+)
+from repro.core.recovery import (  # noqa: F401
+    RecoveryManager, Response, RestartRequired, RetirementMap,
+)
+from repro.core.scrubber import Scrubber  # noqa: F401
+from repro.core.sidecar import (  # noqa: F401
+    ScrubReport, build_sidecar, scrub, sidecar_bytes, state_bytes,
+)
+from repro.core.taxonomy import Outcome, OutcomeStats  # noqa: F401
+from repro.core.tiers import TIER_TABLE, Tier, capacity_overhead  # noqa: F401

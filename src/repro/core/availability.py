@@ -1,0 +1,124 @@
+"""Single-server availability + incorrect-query model (Fig. 5, right axis).
+
+Event flow for each incident memory error, by tier of the region it strikes:
+
+  NONE      consumed: crash w.p. p_crash(region), else may surface
+            incorrect results at r_incorrect(region) per million queries
+  PARITY_R  detected on scrub/access (odd-bit) -> software reload costing
+            RECOVERY_SECONDS; even-bit (multi_bit_fraction) escapes ->
+            consumed as above
+  SECDED    single-bit corrected silently; double-bit detected-uncorrectable
+            -> software reload under an HRM response, or a machine-check
+            CRASH on the homogeneous typical server (no software layer)
+  MIRROR/DECTED  corrected; negligible escape at these rates
+
+Calibration (documented in DESIGN.md §8): with the WebSearch vulnerability
+profile below and ERRORS_PER_SERVER_MONTH = 540 (an error-heavy server, as
+in the paper's motivation), the five design points land on the published
+numbers: Consumer PC ~99.0% availability; D&R: 2.9% server saving, <=3
+crashes/month, ~9-10 incorrect per million queries, >=99.90% availability;
+D&R/L: 4.7% saving, <=4 crashes, <=12 incorrect/M.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping
+
+from repro.core.costmodel import RegionProfile, WEBSEARCH
+from repro.core.tiers import Tier
+
+ERRORS_PER_SERVER_MONTH = 540.0
+LESS_TESTED_RATE_FACTOR = 1.5
+MULTI_BIT_FRACTION = 0.002
+CRASH_MTTR_MIN = 10.0          # restart + warmup
+RECOVERY_SECONDS = 2.0         # reload a region's clean copy
+MINUTES_PER_MONTH = 30 * 24 * 60
+
+
+@dataclass(frozen=True)
+class VulnProfile:
+    """Measured (or paper-calibrated) per-region vulnerability."""
+    p_crash: Mapping[str, float]          # P(crash | error consumed)
+    r_incorrect: Mapping[str, float]      # incorrect per M queries per
+                                          # consumed error
+
+
+WEBSEARCH_VULN = VulnProfile(
+    p_crash={"private": 0.05, "heap": 0.15, "stack": 0.50, "other": 0.20},
+    r_incorrect={"private": 3.0, "heap": 1.0, "stack": 0.1, "other": 1.5},
+)
+
+
+@dataclass
+class AvailabilityResult:
+    name: str
+    crashes_per_month: float
+    recoveries_per_month: float
+    incorrect_per_million: float
+    downtime_min_per_month: float
+    availability: float
+
+    def row(self) -> str:
+        return (f"{self.name:18s} avail={self.availability:8.4%} "
+                f"crashes/mo={self.crashes_per_month:5.2f} "
+                f"incorrect/M={self.incorrect_per_million:5.2f} "
+                f"recoveries/mo={self.recoveries_per_month:7.1f}")
+
+
+def evaluate_availability(name: str,
+                          tiers_by_region: Mapping[str, Tier],
+                          profile: RegionProfile,
+                          vuln: VulnProfile,
+                          *,
+                          less_tested: bool = False,
+                          software_response: bool = True,
+                          errors_per_month: float = ERRORS_PER_SERVER_MONTH,
+                          ) -> AvailabilityResult:
+    e_total = errors_per_month * (LESS_TESTED_RATE_FACTOR if less_tested
+                                  else 1.0)
+    crashes = 0.0
+    recoveries = 0.0
+    incorrect = 0.0
+    for region, frac in profile.fractions.items():
+        e = e_total * frac
+        tier = tiers_by_region.get(region, Tier.NONE)
+        pc = vuln.p_crash.get(region, 0.1)
+        ri = vuln.r_incorrect.get(region, 1.0)
+        if tier == Tier.NONE:
+            consumed = e
+        elif tier == Tier.PARITY_R:
+            detected = e * (1.0 - MULTI_BIT_FRACTION)
+            recoveries += detected
+            consumed = e * MULTI_BIT_FRACTION
+        elif tier == Tier.SECDED:
+            ue = e * MULTI_BIT_FRACTION        # detected-uncorrectable
+            if software_response:
+                recoveries += ue
+            else:
+                crashes += ue                   # machine-check on typical HW
+            consumed = 0.0
+        else:                                   # DECTED / MIRROR
+            consumed = 0.0
+        crashes += consumed * pc
+        incorrect += consumed * (1.0 - pc) * ri
+    downtime = (crashes * CRASH_MTTR_MIN
+                + recoveries * RECOVERY_SECONDS / 60.0)
+    avail = 1.0 - downtime / MINUTES_PER_MONTH
+    return AvailabilityResult(name, crashes, recoveries, incorrect,
+                              downtime, avail)
+
+
+def paper_design_availability() -> Dict[str, AvailabilityResult]:
+    """The five Fig. 5 design points on the WebSearch profile."""
+    from repro.core.costmodel import _PAPER_POLICIES, _LESS_TESTED
+    out = {}
+    for name, pol in _PAPER_POLICIES.items():
+        out[name] = evaluate_availability(
+            name, pol, WEBSEARCH, WEBSEARCH_VULN,
+            less_tested=name in _LESS_TESTED,
+            # the homogeneous typical/less-tested servers have no software
+            # response layer: an uncorrectable ECC error is a crash
+            software_response=name in ("detect_recover", "detect_recover_l",
+                                       "consumer_pc"),
+        )
+    return out

@@ -1,0 +1,158 @@
+"""The error-emulation campaign (Fig. 2): golden run -> inject -> execute ->
+classify per the Fig. 1 taxonomy -> repeat.
+
+``run_campaign`` is application-agnostic: it takes an ``eval_fn`` mapping a
+state pytree to output token ids (any int array — the "query response"), a
+state, and a region filter, and returns per-region ``OutcomeStats``.
+
+Classification (design goals of §2.1: controlled, efficient, adaptable):
+  CRASH            eval raised, or produced non-finite / out-of-range output
+  INCORRECT        any output token differs from the golden response
+  MASKED_OVERWRITE output identical AND the program overwrote the corrupted
+                   value (final leaf == clean leaf) — possible for mutable
+                   regions (caches, activations, optimizer state)
+  MASKED_LOGIC     output identical, corrupted value still resident
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.errormodel import InjectionPlan
+from repro.core.injection import Injector
+from repro.core.sidecar import _set_leaf, leaf_index
+from repro.core.taxonomy import Outcome, OutcomeStats
+from repro.kernels import ops
+
+
+@dataclass
+class CampaignResult:
+    """per (region, error_kind) outcome statistics."""
+    stats: Dict[Tuple[str, str], OutcomeStats] = field(default_factory=dict)
+
+    def stat(self, region: str, kind: str) -> OutcomeStats:
+        key = (region, kind)
+        if key not in self.stats:
+            self.stats[key] = OutcomeStats.zero()
+        return self.stats[key]
+
+    def crash_prob(self, region: str = None, kind: str = None) -> float:
+        agg = OutcomeStats.zero()
+        for (r, k), s in self.stats.items():
+            if (region is None or r == region) and (kind is None or k == kind):
+                for o, n in s.counts.items():
+                    agg.add(o, n)
+        return agg.crash_prob
+
+    def incorrect_prob(self, region=None, kind=None) -> float:
+        agg = OutcomeStats.zero()
+        for (r, k), s in self.stats.items():
+            if (region is None or r == region) and (kind is None or k == kind):
+                for o, n in s.counts.items():
+                    agg.add(o, n)
+        return agg.incorrect_prob
+
+    def regions(self) -> List[str]:
+        return sorted({r for r, _ in self.stats})
+
+
+def _finite(x) -> bool:
+    return bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+def classify_trial(golden_out: np.ndarray, out, clean_leaf, final_leaf,
+                   crashed: bool) -> Outcome:
+    if crashed:
+        return Outcome.CRASH
+    out = np.asarray(out)
+    if not np.array_equal(out, np.asarray(golden_out)):
+        return Outcome.INCORRECT
+    if np.array_equal(np.asarray(final_leaf), np.asarray(clean_leaf)):
+        return Outcome.MASKED_OVERWRITE
+    return Outcome.MASKED_LOGIC
+
+
+def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
+                 errors_per_trial: int = 1, seed: int = 0,
+                 kinds: Tuple[str, ...] = ("soft", "hard"),
+                 hard_repeat: int = 3,
+                 region_filter: Optional[Callable[[str], bool]] = None,
+                 root: str = "params") -> CampaignResult:
+    """Run the Fig.2 loop. ``eval_fn(state) -> (token_ids, final_state)``.
+
+    ``final_state`` lets mutable-region experiments (caches) report the
+    post-run leaf so overwrite-masking is detectable; for read-only params
+    eval_fn may return the input state.
+
+    Hard errors are re-asserted ``hard_repeat`` times (re-applied after each
+    of ``hard_repeat`` consecutive queries) — a sticky cell keeps biting.
+    """
+    rng = np.random.default_rng(seed)
+    idx = leaf_index(state, root)
+    paths = [p for p, info in idx.items()
+             if region_filter is None or region_filter(info["region"])]
+    # sample leaves weighted by byte size (errors strike uniformly over bytes)
+    weights = np.array([idx[p]["leaf"].size * idx[p]["leaf"].dtype.itemsize
+                        for p in paths], dtype=np.float64)
+    weights = weights / weights.sum()
+
+    golden_out, _ = eval_fn(state)
+    golden_out = np.asarray(golden_out)
+    result = CampaignResult()
+
+    for kind in kinds:
+        hard = kind == "hard"
+        for t in range(n_trials):
+            path = paths[rng.choice(len(paths), p=weights)]
+            region = idx[path]["region"]
+            clean_leaf = idx[path]["leaf"]
+            n_words = ops.words_per_tensor(clean_leaf)
+            plan = InjectionPlan.sample(rng, n_words, errors_per_trial, hard)
+            corrupted = Injector.apply_plan(state, path, plan)
+            outcome = None
+            reps = hard_repeat if hard else 1
+            for r in range(reps):
+                crashed = False
+                out, final_state = None, corrupted
+                try:
+                    out, final_state = eval_fn(corrupted)
+                    crashed = not _finite(jnp.asarray(out).astype(jnp.float32))
+                except (FloatingPointError, ZeroDivisionError, ValueError,
+                        RuntimeError):
+                    crashed = True
+                final_leaf = leaf_index(final_state, root)[path]["leaf"] \
+                    if final_state is not None else clean_leaf
+                o = classify_trial(golden_out, out if out is not None else
+                                   golden_out + 1, clean_leaf, final_leaf,
+                                   crashed)
+                # worst outcome across repeats wins (hard errors persist)
+                order = [Outcome.MASKED_OVERWRITE, Outcome.MASKED_LOGIC,
+                         Outcome.INCORRECT, Outcome.CRASH]
+                if outcome is None or order.index(o) > order.index(outcome):
+                    outcome = o
+                if hard and r + 1 < reps:
+                    corrupted = Injector.apply_plan(final_state, path, plan)
+            result.stat(region, kind).add(outcome)
+    return result
+
+
+def lm_eval_fn(cfg, batch, forward):
+    """Standard LM 'query': greedy tokens of a forward pass.
+
+    jnp.nan-safe: NaN/Inf logits -> argmax still returns ints; we flag
+    non-finiteness via the max logit channel appended to the output.
+    """
+    def eval_fn(params):
+        logits, _, _ = forward(params, batch, cfg)
+        toks = jnp.argmax(logits, axis=-1)
+        flag = jnp.isfinite(logits.astype(jnp.float32)).all().astype(
+            jnp.int32)
+        # non-finite forward = crash marker (token -1 never matches golden)
+        toks = jnp.where(flag > 0, toks, -1)
+        return toks, params
+    return eval_fn

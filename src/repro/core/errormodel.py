@@ -1,0 +1,74 @@
+"""Memory error model: soft (transient) and hard (sticky) single/multi-bit
+errors, with a less-tested device class at an elevated raw rate.
+
+Rates follow the shape of the field studies the paper cites (Schroeder+09,
+Meza+15, Sridharan+12): errors arrive per GB-month; a fraction are hard
+(recurring at the same physical location until retired/repaired); hard
+errors are more likely to be multi-bit. ``less_tested`` scales the raw
+incidence by ``LESS_TESTED_FACTOR`` (the device class the paper's /L design
+points buy at a testing-cost discount).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+import numpy as np
+
+LESS_TESTED_FACTOR = 4.0
+HOURS_PER_MONTH = 30 * 24
+
+
+@dataclass(frozen=True)
+class ErrorModel:
+    # raw incident error events per GB of app data per month (unprotected)
+    errors_per_gb_month: float = 67.5
+    hard_fraction: float = 0.4          # sticky errors (device defects)
+    multi_bit_fraction: float = 0.02    # >1 bit in one 64-bit word
+    less_tested: bool = False
+
+    @property
+    def rate_per_gb_month(self) -> float:
+        f = LESS_TESTED_FACTOR if self.less_tested else 1.0
+        return self.errors_per_gb_month * f
+
+    def errors_per_month(self, gb: float) -> float:
+        return self.rate_per_gb_month * gb
+
+    def with_less_tested(self, flag: bool = True) -> "ErrorModel":
+        return replace(self, less_tested=flag)
+
+
+@dataclass
+class InjectionPlan:
+    """A concrete set of bit flips for one emulation trial (Fig. 2 step 2).
+
+    word_idx/bit_idx address the packed 64-bit-word space of one tensor.
+    ``hard`` errors re-assert after every write (the injector re-applies
+    them each step); soft errors flip once.
+    """
+    word_idx: np.ndarray          # (E,) int32, -1 padding
+    bit_idx: np.ndarray           # (E,) int32
+    hard: bool
+
+    @classmethod
+    def sample(cls, rng: np.ndarray, n_words: int, n_errors: int,
+               hard: bool, multi_bit_fraction: float = 0.0,
+               pad_to: int = 8) -> "InjectionPlan":
+        rng = np.random.default_rng(rng)
+        words = rng.integers(0, n_words, size=n_errors)
+        bits = rng.integers(0, 64, size=n_errors)
+        # multi-bit events: add a second flip in the same word
+        extra_w, extra_b = [], []
+        for w in words:
+            if rng.random() < multi_bit_fraction:
+                extra_w.append(w)
+                extra_b.append(rng.integers(0, 64))
+        words = np.concatenate([words, np.array(extra_w, dtype=np.int64)])
+        bits = np.concatenate([bits, np.array(extra_b, dtype=np.int64)])
+        e = max(pad_to, -(-len(words) // pad_to) * pad_to)
+        wi = np.full(e, -1, np.int32)
+        bi = np.zeros(e, np.int32)
+        wi[:len(words)] = words
+        bi[:len(bits)] = bits
+        return cls(wi, bi, hard)

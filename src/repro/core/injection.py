@@ -1,0 +1,69 @@
+"""Controlled error injection into state pytrees (the Fig. 2 framework,
+steps 1-2, adapted from WinDBG/GDB process memory to jit-visible tensors).
+
+An ``Injector`` owns a set of live errors. Soft errors flip once; hard
+errors are *sticky*: they re-assert after every program write to the
+location (emulating a damaged cell), which the injector realizes by
+re-applying the flip after every step/scrub.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.errormodel import InjectionPlan
+from repro.core.sidecar import _set_leaf, leaf_index
+from repro.kernels import ops
+
+
+@dataclass
+class LiveError:
+    path: str
+    plan: InjectionPlan
+
+
+@dataclass
+class Injector:
+    rng: np.random.Generator
+    live: List[LiveError] = field(default_factory=list)
+
+    @classmethod
+    def seeded(cls, seed: int) -> "Injector":
+        return cls(np.random.default_rng(seed))
+
+    def sample_into(self, state, path: str, n_errors: int = 1,
+                    hard: bool = False, multi_bit_fraction: float = 0.0,
+                    root: str = "params"):
+        """Sample a plan for leaf ``path`` and apply it. Returns new state."""
+        idx = leaf_index(state, root)
+        leaf = idx[path]["leaf"]
+        n_words = ops.words_per_tensor(leaf)
+        plan = InjectionPlan.sample(self.rng, n_words, n_errors, hard,
+                                    multi_bit_fraction)
+        if hard:
+            self.live.append(LiveError(path, plan))
+        return self.apply_plan(state, path, plan)
+
+    @staticmethod
+    def apply_plan(state, path: str, plan: InjectionPlan):
+        idx = leaf_index(state)
+        leaf = idx[path]["leaf"]
+        flipped = ops.inject_bitflips(
+            leaf, jax.numpy.asarray(plan.word_idx),
+            jax.numpy.asarray(plan.bit_idx))
+        return _set_leaf(state, path, flipped)
+
+    def reassert_hard(self, state):
+        """Re-apply all sticky errors (call after every write/scrub)."""
+        for err in self.live:
+            state = self.apply_plan(state, err.path, err.plan)
+        return state
+
+    def clear(self, path: Optional[str] = None):
+        if path is None:
+            self.live = []
+        else:
+            self.live = [e for e in self.live if e.path != path]

@@ -1,0 +1,143 @@
+"""HRM policy: the region -> tier mapping (the paper's granularity dimension
+at memory-region level) plus the five evaluated design points.
+
+Regions of a training/serving job's state (the TPU analogue of the paper's
+stack/heap/private classification) are derived from pytree paths:
+
+    params/embed   token/patch/frame embeddings + LM head
+    params/attn    attention projections (incl. shared hybrid block)
+    params/mlp     dense MLP weights
+    params/experts MoE expert weights (cold, Par+R-friendly)
+    params/ssm     Mamba2 / xLSTM mixer weights
+    params/norm    norms and other small vectors
+    opt/m, opt/v   optimizer moments
+    kv_cache       decode KV cache / recurrent states
+    activations    transient per-step tensors (policy is advisory: they are
+                   never scrubbed, only accounted in the cost model)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.core.errormodel import ErrorModel
+from repro.core.tiers import Tier
+
+REGIONS = ("params/embed", "params/attn", "params/mlp", "params/experts",
+           "params/ssm", "params/norm", "opt/m", "opt/v", "kv_cache",
+           "activations")
+
+_SSM_KEYS = ("mamba", "mlstm", "slstm", "conv_w", "conv_b", "a_log",
+             "dt_bias", "d_skip")
+_EMBED_KEYS = ("embed", "head", "patch_proj", "frame_proj")
+_ATTN_KEYS = ("attn", "wq", "wk", "wv", "wo", "bq", "bk", "bv")
+_EXPERT_KEYS = ("moe", "experts", "router")
+_CACHE_KEYS = ("k", "v", "attn_k", "attn_v", "mamba_conv", "mamba_ssm",
+               "m_conv", "m_c", "s_c", "s_n", "s_h", "s_m")
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            out.append(str(e.key).lower())
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            out.append(str(e.name).lower())
+        else:
+            out.append(str(e).lower())
+    return tuple(out)
+
+
+def classify_path(path, root: str = "params") -> str:
+    """Map a pytree path to an HRM region name."""
+    keys = _path_keys(path)
+    if root == "opt":
+        return "opt/m" if keys and keys[0] in ("m", "mu") else "opt/v"
+    if root == "cache":
+        return "kv_cache"
+    ks = set(keys)
+    if ks & set(_EXPERT_KEYS):
+        return "params/experts"
+    if ks & set(_SSM_KEYS):
+        return "params/ssm"
+    if any(k in _EMBED_KEYS for k in keys):
+        return "params/embed"
+    if ks & set(_ATTN_KEYS):
+        return "params/attn"
+    if any("norm" in k for k in keys):
+        return "params/norm"
+    if any(k in ("mlp", "wi", "wg", "shared") for k in keys):
+        return "params/mlp"
+    return "params/mlp"
+
+
+@dataclass(frozen=True)
+class HRMPolicy:
+    """region -> Tier, with a default for unlisted regions."""
+    name: str
+    tiers: Dict[str, Tier] = field(default_factory=dict)
+    default: Tier = Tier.NONE
+    error_model: ErrorModel = field(default_factory=ErrorModel)
+    scrub_interval: int = 50           # steps between scrub passes
+
+    def tier_of(self, region: str) -> Tier:
+        return self.tiers.get(region, self.default)
+
+    def __hash__(self):
+        return hash((self.name, tuple(sorted(
+            (k, v.value) for k, v in self.tiers.items())), self.default.value))
+
+
+# ------------------------------------------------- the five design points
+def typical_server() -> HRMPolicy:
+    """Baseline: SEC-DED homogeneously everywhere (non-HRM)."""
+    return HRMPolicy("typical_server",
+                     {r: Tier.SECDED for r in REGIONS},
+                     default=Tier.SECDED)
+
+
+def consumer_pc() -> HRMPolicy:
+    """No protection anywhere (non-HRM)."""
+    return HRMPolicy("consumer_pc", {}, default=Tier.NONE)
+
+
+def detect_recover() -> HRMPolicy:
+    """HRM: Par+R on the long-lived 'private'-like regions, none elsewhere."""
+    return HRMPolicy(
+        "detect_recover",
+        {"params/embed": Tier.PARITY_R, "params/attn": Tier.PARITY_R,
+         "params/mlp": Tier.PARITY_R, "params/experts": Tier.PARITY_R,
+         "params/ssm": Tier.PARITY_R, "params/norm": Tier.PARITY_R,
+         "opt/m": Tier.PARITY_R, "opt/v": Tier.PARITY_R},
+        default=Tier.NONE)
+
+
+def less_tested() -> HRMPolicy:
+    """SEC-DED everywhere on less-tested devices (non-HRM)."""
+    p = typical_server()
+    return HRMPolicy("less_tested", dict(p.tiers), default=Tier.SECDED,
+                     error_model=ErrorModel(less_tested=True))
+
+
+def detect_recover_l() -> HRMPolicy:
+    """HRM on less-tested devices: SEC-DED on the most vulnerable regions,
+    Par+R on the bulky tolerant ones."""
+    return HRMPolicy(
+        "detect_recover_l",
+        {"params/embed": Tier.SECDED, "params/attn": Tier.SECDED,
+         "params/norm": Tier.SECDED, "params/ssm": Tier.SECDED,
+         "params/mlp": Tier.PARITY_R, "params/experts": Tier.PARITY_R,
+         "opt/m": Tier.PARITY_R, "opt/v": Tier.PARITY_R},
+        default=Tier.NONE,
+        error_model=ErrorModel(less_tested=True))
+
+
+DESIGN_POINTS = {
+    "typical_server": typical_server,
+    "consumer_pc": consumer_pc,
+    "detect_recover": detect_recover,
+    "less_tested": less_tested,
+    "detect_recover_l": detect_recover_l,
+}

@@ -1,0 +1,90 @@
+"""Software responses to detected memory errors (Table 2, middle block).
+
+  RELOAD_CLEAN_COPY  Par+R: fetch the leaf's clean bytes from the durable
+                     store (checkpoint) — the paper's "correct with a clean
+                     copy of data from disk".
+  PEER_COPY          fetch from a data-parallel replica (in-memory, faster
+                     than disk; available whenever the mesh has a data axis).
+  RETIRE             block retirement: mark the leaf's faulty 512-byte
+                     blocks, remap them to spares (zeros + re-init), stop
+                     counting their recurring errors (page-offlining
+                     analogue for recurring hard errors).
+  RESTART            abandon the step and restart from the last checkpoint.
+  CONSUME            do nothing (measurement mode).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.scrubber import Scrubber
+from repro.core.sidecar import ScrubReport, _set_leaf, leaf_index
+
+
+class Response(enum.Enum):
+    RELOAD_CLEAN_COPY = "reload_clean_copy"
+    PEER_COPY = "peer_copy"
+    RETIRE = "retire"
+    RESTART = "restart"
+    CONSUME = "consume"
+
+
+class RestartRequired(RuntimeError):
+    """Raised when the policy's response to an uncorrectable error is a
+    restart-from-checkpoint; the runtime loop catches it."""
+
+
+@dataclass
+class RetirementMap:
+    """Per-leaf retired-block bitmap (512-byte blocks)."""
+    blocks: Dict[str, set] = field(default_factory=dict)
+
+    def retire(self, path: str, block: int) -> None:
+        self.blocks.setdefault(path, set()).add(block)
+
+    def count(self, path: Optional[str] = None) -> int:
+        if path is not None:
+            return len(self.blocks.get(path, ()))
+        return sum(len(b) for b in self.blocks.values())
+
+
+@dataclass
+class RecoveryManager:
+    clean_copy: Callable[[str], object]       # path -> clean leaf
+    response: Response = Response.RELOAD_CLEAN_COPY
+    retirement: RetirementMap = field(default_factory=RetirementMap)
+    events: List[dict] = field(default_factory=list)
+    # recurring-error bookkeeping for retirement escalation
+    strike_counts: Dict[str, int] = field(default_factory=dict)
+    retire_after: int = 3
+
+    def respond(self, state, report: ScrubReport, scrubber: Scrubber,
+                root: str = "params"):
+        """Handle every leaf the scrub flagged uncorrectable."""
+        needs = report.needs_recovery()
+        if not needs:
+            return state
+        if self.response == Response.CONSUME:
+            self.events.append({"action": "consume", "paths": list(needs)})
+            return state
+        if self.response == Response.RESTART:
+            self.events.append({"action": "restart", "paths": list(needs)})
+            raise RestartRequired(str(list(needs)))
+        for path, n in needs.items():
+            self.strike_counts[path] = self.strike_counts.get(path, 0) + 1
+            clean = self.clean_copy(path)
+            state = _set_leaf(state, path, clean)
+            action = ("peer_copy" if self.response == Response.PEER_COPY
+                      else "reload_clean_copy")
+            if self.strike_counts[path] >= self.retire_after:
+                # recurring errors at the same leaf: retire its blocks so
+                # the hard fault stops re-biting (page-offlining analogue)
+                self.retirement.retire(path, self.strike_counts[path])
+                action += "+retire"
+            self.events.append({"action": action, "path": path,
+                                "words": int(n)})
+            scrubber.refresh(state, paths=[path])
+        return state

@@ -1,0 +1,52 @@
+"""Reliability tiers — the hardware dimension of the HRM design space.
+
+Mirrors Table 1 of the paper. Each tier's capacity overhead is realized *for
+real* by the software sidecar implementation (``core/sidecar.py``): SEC-DED
+stores 1 ECC byte per 64-bit word (12.5%), parity packs 1 bit per word
+(1.6%), MIRROR keeps a full second copy (100% + its own parity), matching
+the paper's numbers, so the cost model's capacity column is measured, not
+assumed.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+
+class Tier(enum.Enum):
+    NONE = "none"              # no detection, no correction
+    PARITY_R = "parity_r"      # parity detect + software reload (Par+R)
+    SECDED = "secded"          # Hamming(72,64): correct 1, detect 2 / 64b
+    DECTED = "dected"          # emulated: SEC-DED over 32-bit half words
+                               #   -> corrects 2/64 data bits (23.4% capacity)
+    MIRROR = "mirror"          # full replica + parity: tolerates any word loss
+
+
+@dataclass(frozen=True)
+class TierInfo:
+    detect: str
+    correct: str
+    capacity_overhead: float   # fraction of protected bytes
+    added_logic: str           # qualitative, from Table 1
+    corrects_single_bit: bool
+    detects_single_bit: bool
+    detects_double_bit: bool
+    corrects_double_bit: bool
+
+
+TIER_TABLE = {
+    Tier.NONE: TierInfo("none", "none", 0.0, "none",
+                        False, False, False, False),
+    Tier.PARITY_R: TierInfo("n/64 bits (odd n)", "software reload", 1.0 / 64,
+                            "low", False, True, False, False),
+    Tier.SECDED: TierInfo("2/64 bits", "1/64 bits", 8.0 / 64, "low",
+                          True, True, True, False),
+    Tier.DECTED: TierInfo("2x2/32 bits", "2/64 bits (1/32b halves)",
+                          15.0 / 64, "low", True, True, True, True),
+    Tier.MIRROR: TierInfo("replica compare", "replica copy", 1.0 + 1.0 / 64,
+                          "low", True, True, True, True),
+}
+
+
+def capacity_overhead(tier: Tier) -> float:
+    return TIER_TABLE[tier].capacity_overhead

@@ -1,0 +1,75 @@
+"""Deterministic synthetic data pipeline.
+
+Produces shardable batches for every model family without touching disk.
+The LM stream is a reproducible Zipf-ish token process with a copy structure
+so a ~100M model trained for a few hundred steps shows a real, monotonic
+loss drop (the end-to-end example's success criterion).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def lm_batch(cfg: ModelConfig, batch: int, seq: int, seed: int
+             ) -> Dict[str, jax.Array]:
+    """Next-token LM batch: tokens + shifted labels."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    # Zipf body with periodic copy spans -> learnable structure
+    base = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64) % (V - 1) + 1
+    period = 17
+    idx = np.arange(seq + 1)
+    copy_from = np.maximum(idx - period, 0)
+    mask = (idx % period) < (period // 2)
+    stream = np.where(mask[None, :], base[:, copy_from], base)
+    tokens = jnp.asarray(stream[:, :-1], jnp.int32)
+    labels = jnp.asarray(stream[:, 1:], jnp.int32)
+    return {"tokens": tokens, "labels": labels}
+
+
+def audio_batch(cfg: ModelConfig, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(
+        rng.standard_normal((batch, seq, cfg.d_model), dtype=np.float32))
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                         jnp.int32)
+    return {"frames": frames, "labels": labels}
+
+
+def vlm_batch(cfg: ModelConfig, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n_p = cfg.n_patches
+    s_text = seq - n_p
+    assert s_text > 0, (seq, n_p)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (batch, s_text + 1)),
+                         jnp.int32)
+    patches = jnp.asarray(
+        rng.standard_normal((batch, n_p, cfg.d_model), dtype=np.float32))
+    return {"tokens": tokens[:, :-1], "patches": patches,
+            "labels": tokens[:, 1:]}
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0,
+               batch_override: int | None = None) -> Dict[str, jax.Array]:
+    b = batch_override if batch_override is not None else shape.global_batch
+    if cfg.frontend == "audio_frames":
+        return audio_batch(cfg, b, shape.seq_len, seed)
+    if cfg.frontend == "vision_patches":
+        return vlm_batch(cfg, b, shape.seq_len, seed)
+    return lm_batch(cfg, b, shape.seq_len, seed)
+
+
+def batch_stream(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+                 ) -> Iterator[Dict[str, jax.Array]]:
+    """Infinite deterministic stream (step i derives from seed+i)."""
+    i = 0
+    shape = ShapeSpec("stream", seq, batch, "train")
+    while True:
+        yield make_batch(cfg, shape, seed=seed + i, batch_override=batch)
+        i += 1

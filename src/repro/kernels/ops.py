@@ -1,0 +1,191 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles packing arbitrary tensors (f32 / bf16 / f16 / i32 / u32 / i8 / u8)
+into the (M, W)-shaped uint32 word-lane layout the kernels consume, and
+unpacking corrected data back to the original shape/dtype. On CPU the
+kernels run in ``interpret=True`` mode (Python-level execution of the same
+kernel body) — TPU is the compile target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bitflip as _bitflip
+from repro.kernels import parity as _parity
+from repro.kernels import secded as _secded
+
+INTERPRET = jax.default_backend() == "cpu"
+LANES = 256          # words per packed row; multiple of the 128-lane tile
+BLOCK_ROWS = 128
+
+
+def _u32_view(x: jax.Array) -> jax.Array:
+    """Flatten + bitcast any supported tensor to a flat uint32 vector."""
+    x = x.reshape(-1)
+    nbits = x.dtype.itemsize * 8
+    if nbits == 32:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if nbits == 16:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+        if u.shape[0] % 2:
+            u = jnp.pad(u, (0, 1))
+        u = u.reshape(-1, 2)
+        return u[:, 0] | (u[:, 1] << 16)
+    if nbits == 8:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint8).astype(jnp.uint32)
+        pad = (-u.shape[0]) % 4
+        if pad:
+            u = jnp.pad(u, (0, pad))
+        u = u.reshape(-1, 4)
+        return (u[:, 0] | (u[:, 1] << 8) | (u[:, 2] << 16)
+                | (u[:, 3] << 24))
+    raise TypeError(f"unsupported dtype {x.dtype}")
+
+
+def _u32_unview(u: jax.Array, shape, dtype) -> jax.Array:
+    n = int(np.prod(shape)) if shape else 1
+    nbits = jnp.dtype(dtype).itemsize * 8
+    if nbits == 32:
+        flat = jax.lax.bitcast_convert_type(u, jnp.dtype(dtype))
+    elif nbits == 16:
+        lo = (u & 0xFFFF).astype(jnp.uint16)
+        hi = (u >> 16).astype(jnp.uint16)
+        flat = jax.lax.bitcast_convert_type(
+            jnp.stack([lo, hi], axis=-1).reshape(-1), jnp.dtype(dtype))
+    elif nbits == 8:
+        parts = [((u >> (8 * k)) & 0xFF).astype(jnp.uint8) for k in range(4)]
+        flat = jax.lax.bitcast_convert_type(
+            jnp.stack(parts, axis=-1).reshape(-1), jnp.dtype(dtype))
+    else:
+        raise TypeError(dtype)
+    return flat[:n].reshape(shape)
+
+
+class Packed(NamedTuple):
+    lo: jax.Array            # (M, LANES) uint32
+    hi: jax.Array            # (M, LANES) uint32
+
+
+def _round_rows(rows: int) -> int:
+    """Rows padded so the kernel grid divides evenly: tensors larger than
+    one block round up to a multiple of BLOCK_ROWS."""
+    rows = max(1, rows)
+    if rows > BLOCK_ROWS:
+        rows = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
+    return rows
+
+
+def pack_words(x: jax.Array) -> Packed:
+    """Tensor -> (lo, hi) word lanes, zero-padded to full (M, LANES) rows."""
+    u = _u32_view(x)
+    if u.shape[0] % 2:
+        u = jnp.pad(u, (0, 1))
+    pairs = u.reshape(-1, 2)                      # (n64, 2)
+    n64 = pairs.shape[0]
+    rows = _round_rows(-(-n64 // LANES))
+    pad = rows * LANES - n64
+    if pad:
+        pairs = jnp.pad(pairs, ((0, pad), (0, 0)))
+    pairs = pairs.reshape(rows, LANES, 2)
+    return Packed(pairs[..., 0], pairs[..., 1])
+
+
+def unpack_words(p: Packed, shape, dtype) -> jax.Array:
+    pairs = jnp.stack([p.lo, p.hi], axis=-1).reshape(-1, 2)
+    return _u32_unview(pairs.reshape(-1), shape, dtype)
+
+
+def words_per_tensor(x) -> int:
+    """Number of (M, LANES)-padded 64-bit words used for tensor ``x``."""
+    nbytes = int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize if x.shape \
+        else jnp.dtype(x.dtype).itemsize
+    n64 = -(-nbytes // 8)
+    return _round_rows(-(-n64 // LANES)) * LANES
+
+
+def _bm(m: int) -> int:
+    return min(BLOCK_ROWS, m)
+
+
+# --------------------------------------------------------------- SEC-DED
+def secded_encode(x: jax.Array) -> jax.Array:
+    """ECC sidecar for tensor ``x``: (M, LANES) uint8 (12.5% capacity)."""
+    p = pack_words(x)
+    ecc = _secded.secded_encode_words(p.lo, p.hi, block_rows=_bm(p.lo.shape[0]),
+                                      interpret=INTERPRET)
+    return ecc.astype(jnp.uint8)
+
+
+def secded_scrub(x: jax.Array, ecc: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scrub tensor against its ECC sidecar.
+
+    Returns (corrected tensor, corrected ecc (uint8), n_corrected,
+    n_uncorrectable).
+    """
+    p = pack_words(x)
+    lo, hi, ecc2, corr, unc = _secded.secded_scrub_words(
+        p.lo, p.hi, ecc.astype(jnp.uint32), block_rows=_bm(p.lo.shape[0]),
+        interpret=INTERPRET)
+    x2 = unpack_words(Packed(lo, hi), x.shape, x.dtype)
+    return x2, ecc2.astype(jnp.uint8), jnp.sum(corr), jnp.sum(unc)
+
+
+# ---------------------------------------------------------------- parity
+def parity_encode(x: jax.Array) -> jax.Array:
+    """Packed parity sidecar: (M, LANES//8) uint8 (1.6% capacity)."""
+    p = pack_words(x)
+    par = _parity.parity_encode_words(p.lo, p.hi,
+                                      block_rows=_bm(p.lo.shape[0]),
+                                      interpret=INTERPRET)
+    return par.astype(jnp.uint8)
+
+
+def parity_check(x: jax.Array, par: jax.Array) -> jax.Array:
+    """Number of 64-bit words whose parity mismatches (detected errors)."""
+    p = pack_words(x)
+    _, cnt = _parity.parity_check_words(p.lo, p.hi, par.astype(jnp.uint32),
+                                        block_rows=_bm(p.lo.shape[0]),
+                                        interpret=INTERPRET)
+    return jnp.sum(cnt)
+
+
+def parity_error_words(x: jax.Array, par: jax.Array) -> jax.Array:
+    """Per-word boolean error mask, shape (M, LANES)."""
+    p = pack_words(x)
+    err, _ = _parity.parity_check_words(p.lo, p.hi, par.astype(jnp.uint32),
+                                        block_rows=_bm(p.lo.shape[0]),
+                                        interpret=INTERPRET)
+    bits = (err[..., :, None] >> jnp.arange(8, dtype=jnp.uint32)) & 1
+    return bits.reshape(p.lo.shape).astype(jnp.bool_)
+
+
+def restore_words(x: jax.Array, good: jax.Array, word_mask: jax.Array
+                  ) -> jax.Array:
+    """Replace the 64-bit words of ``x`` flagged in ``word_mask`` with the
+    corresponding words of ``good`` (mirror-repair primitive)."""
+    px, pg = pack_words(x), pack_words(good)
+    lo = jnp.where(word_mask, pg.lo, px.lo)
+    hi = jnp.where(word_mask, pg.hi, px.hi)
+    return unpack_words(Packed(lo, hi), x.shape, x.dtype)
+
+
+# --------------------------------------------------------------- bitflip
+def inject_bitflips(x: jax.Array, word_idx: jax.Array, bit_idx: jax.Array
+                    ) -> jax.Array:
+    """Flip bits (word_idx[e], bit_idx[e]) of tensor ``x`` (packed space).
+
+    ``word_idx`` entries < 0 are inactive slots.
+    """
+    p = pack_words(x)
+    lo, hi = _bitflip.bitflip_words(p.lo, p.hi,
+                                    word_idx.astype(jnp.int32),
+                                    bit_idx.astype(jnp.int32),
+                                    block_rows=_bm(p.lo.shape[0]),
+                                    interpret=INTERPRET)
+    return unpack_words(Packed(lo, hi), x.shape, x.dtype)

@@ -1,0 +1,169 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``cost_analysis()`` has no collective entry, so we parse the
+post-optimization HLO text and sum operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op. Shapes in
+the partitioned module are *per-device*, so the sums are per-chip traffic;
+ring factors convert them to per-chip link bytes.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (45 GB/s is sometimes quoted; we use 50 per the spec).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link (per chip, per direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e5m2|f8e4m3fn|s64|u64|s32|u32"
+                       r"|s16|u16|s8|u8|pred|c64|c128|s4|u4)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return None
+
+
+@dataclass
+class CollectiveStats:
+    ops: Dict[str, int] = field(default_factory=dict)
+    bytes_by_type: Dict[str, float] = field(default_factory=dict)
+    link_bytes_by_type: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_type.values())
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes_by_type.values())
+
+    def to_dict(self) -> Dict:
+        return {"ops": self.ops, "bytes_by_type": self.bytes_by_type,
+                "link_bytes_by_type": self.link_bytes_by_type,
+                "total_bytes": self.total_bytes,
+                "total_link_bytes": self.total_link_bytes}
+
+
+def _ring_factor(kind: str, g: int) -> float:
+    """Per-chip link bytes per RESULT byte under ring algorithms.
+
+    all-gather result = gathered (full) buffer -> (g-1)/g of it crosses
+    links per chip; all-reduce result = full buffer -> 2(g-1)/g;
+    reduce-scatter result = the 1/g shard -> (g-1) result-sized chunks
+    cross links; all-to-all result is full-size -> (g-1)/g.
+    """
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)
+    if kind in ("all-gather", "all-to-all"):
+        return (g - 1) / g
+    return 1.0                                   # collective-permute
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+                     r"(all-gather-start|all-gather|all-reduce-start|"
+                     r"all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute-start|collective-permute)\(", ls)
+        if not m:
+            continue
+        result_part, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        if kind not in _COLLECTIVES:
+            continue
+        nbytes = _shape_bytes(result_part)
+        g = _group_size(ls) or 1
+        stats.ops[kind] = stats.ops.get(kind, 0) + 1
+        stats.bytes_by_type[kind] = stats.bytes_by_type.get(kind, 0.0) \
+            + nbytes
+        stats.link_bytes_by_type[kind] = \
+            stats.link_bytes_by_type.get(kind, 0.0) \
+            + nbytes * _ring_factor(kind, g)
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_link_bytes: float
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_link_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {"flops_per_device": self.flops_per_device,
+                "hbm_bytes_per_device": self.hbm_bytes_per_device,
+                "collective_link_bytes": self.collective_link_bytes,
+                "compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s,
+                "dominant": self.dominant}
+
+
+def roofline_from_compiled(compiled, mesh_devices: int,
+                           hlo_text: Optional[str] = None) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = collective_stats(text)
+    return RooflineTerms(flops, nbytes, colls.total_link_bytes,
+                         mesh_devices)

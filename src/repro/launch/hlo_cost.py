@@ -1,0 +1,287 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits every instruction ONCE — a
+``while`` body (every ``lax.scan``: our layer stacks, microbatch
+accumulation, GLA chunk scans, sLSTM time scans) is counted a single time
+regardless of trip count, which would understate a 126-layer model's FLOPs
+by ~126x. This module re-derives the three roofline inputs from the
+post-optimization HLO text with correct loop multipliers:
+
+  * FLOPs: dot ops (2 * result_elems * contraction_size); matmuls dominate
+    every assigned architecture. Elementwise FLOPs are intentionally not
+    counted (they are bandwidth-bound and show up in the memory term).
+  * HBM bytes: operand + result bytes of fusion-boundary instructions
+    (fusions, dots, collectives, copies, slices) — the standard
+    "bytes at fusion boundaries" HBM-traffic model.
+  * collective link bytes: result bytes x ring factor (see hlo_analysis).
+
+Loop multipliers come from the call graph: ENTRY x1; a while's body/cond
+inherit multiplier x trip count, parsed from the loop condition's compare
+constant (jax scans lower to iv < const). Unknown bounds fall back to x1
+and are reported so the roofline table can flag them.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.hlo_analysis import _DTYPE_BYTES, _ring_factor
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s*"
+                    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"(f64|f32|f16|bf16|f8e5m2|f8e4m3fn|s64|u64|s32|u32"
+                    r"|s16|u16|s8|u8|pred|c64|c128|s4|u4)\[([0-9,]*)\]")
+_PARAM = re.compile(r"([\w.\-]+)\s*:\s*([^,]+?)(?:,|$)")
+_CALLS = re.compile(r"(?:calls|condition|body|to_apply)=%?([\w.\-]+)")
+_WHILE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_S32 = re.compile(r"s32\[\]\s*constant\((\d+)\)")
+_DIRECTION = re.compile(r"direction=(LT|LE|GT|GE)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "broadcast", "reshape", "transpose", "convert",
+             "compare", "add", "subtract", "multiply", "divide", "select",
+             "custom-call", "optimization-barrier", "conditional", "while",
+             "call", "rng-bit-generator", "domain", "token"}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems, nbytes = 0, 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_text: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instruction] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type txt
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("{" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+                comps[cur.name] = cur
+                # parameters carry shapes in the header
+                inner = line[line.find("(") + 1:line.rfind(")")]
+                for pm in _PARAM.finditer(inner):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, result_text, op = m.group(1), m.group(2), m.group(3)
+            cur.symbols[name] = result_text
+            cur.instrs.append(Instruction(name, result_text, op, line))
+    return comps
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    const, direction = None, None
+    for ins in cond.instrs:
+        mc = _CONST_S32.search(ins.line)
+        if mc:
+            const = int(mc.group(1))
+        md = _DIRECTION.search(ins.line)
+        if md:
+            direction = md.group(1)
+    if const is None:
+        return None
+    if direction == "LE":
+        return const + 1
+    return const
+
+
+def _fusion_internal(comps: Dict[str, Computation]) -> set:
+    """Computations reached via calls= / to_apply= (cost counted at the call
+    site), as opposed to while bodies/conds."""
+    internal = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "while":
+                continue
+            for m in _CALLS.finditer(ins.line):
+                internal.add(m.group(1))
+    # while bodies/conds are walked explicitly
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "while":
+                mw = _WHILE.search(ins.line)
+                if mw:
+                    internal.discard(mw.group(1))
+                    internal.discard(mw.group(2))
+    return internal
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.result_text)
+    mo = _OPERANDS.search(ins.line[ins.line.find(ins.op):])
+    contraction = 1
+    mc = _CONTRACT.search(ins.line)
+    if mo and mc:
+        first = mo.group(1).split(",")[0].strip().lstrip("%")
+        lhs_t = comp.symbols.get(first, "")
+        sm = _SHAPE.search(lhs_t)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in mc.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    contraction *= dims[int(ci)]
+    return 2.0 * res_elems * contraction
+
+
+def _fused_dot_flops(comp: Computation, comps) -> float:
+    """Sum dot FLOPs inside a fusion computation (recursing into nested
+    called computations)."""
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            total += _dot_flops(ins, comp)
+    return total
+
+
+def _operand_bytes(ins: Instruction, comp: Computation) -> int:
+    total = 0
+    inner = ins.line[ins.line.find(ins.op) + len(ins.op):]
+    mo = _OPERANDS.search(inner)
+    if not mo:
+        return 0
+    for tok in mo.group(1).split(","):
+        nm = tok.strip().lstrip("%")
+        if nm in comp.symbols:
+            _, b = _shape_elems_bytes(comp.symbols[nm])
+            total += b
+    return total
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_link_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_ops: Dict[str, int] = field(default_factory=dict)
+    unknown_loops: int = 0
+
+    @property
+    def total_coll_link_bytes(self) -> float:
+        return sum(self.coll_link_bytes.values())
+
+    def to_dict(self) -> Dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "coll_bytes": self.coll_bytes,
+                "coll_link_bytes": self.coll_link_bytes,
+                "coll_ops": self.coll_ops,
+                "total_coll_link_bytes": self.total_coll_link_bytes,
+                "unknown_loops": self.unknown_loops}
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def analyze(text: str) -> HloCost:
+    comps = parse_module(text)
+    internal = _fusion_internal(comps)
+    cost = HloCost()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return cost
+
+    def walk(comp: Computation, mult: float, seen: Tuple[str, ...]):
+        if comp.name in seen:          # defensive: no recursion in HLO
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                mw = _WHILE.search(ins.line)
+                if not mw:
+                    continue
+                cond_n, body_n = mw.group(1), mw.group(2)
+                trips = None
+                if cond_n in comps:
+                    trips = _trip_count(comps[cond_n])
+                if trips is None:
+                    trips = 1
+                    cost.unknown_loops += 1
+                if body_n in comps:
+                    walk(comps[body_n], mult * trips,
+                         seen + (comp.name,))
+                if cond_n in comps:
+                    walk(comps[cond_n], mult * trips, seen + (comp.name,))
+                continue
+            if ins.op in ("conditional", "call"):
+                for m in _CALLS.finditer(ins.line):
+                    sub = m.group(1)
+                    if sub in comps:
+                        walk(comps[sub], mult, seen + (comp.name,))
+                continue
+            if ins.op == "dot":
+                cost.flops += mult * _dot_flops(ins, comp)
+            if ins.op == "fusion":
+                # dots can live INSIDE fusion computations (common on the
+                # CPU backend for small GEMMs) — count them at the call
+                # site's multiplier
+                for m in _CALLS.finditer(ins.line):
+                    sub = m.group(1)
+                    if sub in comps:
+                        cost.flops += mult * _fused_dot_flops(comps[sub],
+                                                              comps)
+            base = ins.op.replace("-start", "")
+            if base in _COLL_KINDS:
+                _, rb = _shape_elems_bytes(ins.result_text)
+                g = _group_size(ins.line)
+                cost.coll_ops[base] = cost.coll_ops.get(base, 0) + 1
+                cost.coll_bytes[base] = cost.coll_bytes.get(base, 0.0) \
+                    + mult * rb
+                cost.coll_link_bytes[base] = \
+                    cost.coll_link_bytes.get(base, 0.0) \
+                    + mult * rb * _ring_factor(base, g)
+            # HBM bytes at fusion boundaries
+            if ins.op not in _FREE_OPS or ins.op == "fusion":
+                _, rb = _shape_elems_bytes(ins.result_text)
+                cost.hbm_bytes += mult * (rb + _operand_bytes(ins, comp))
+
+    walk(entry, 1.0, ())
+    # also count non-fused executable computations that are fusion-internal?
+    # no: their cost is represented by the fusion call-site boundary bytes.
+    return cost

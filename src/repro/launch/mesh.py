@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state; callers (dryrun.py)
+set ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain the placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(mesh_cfg: MeshConfig):
+    return jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes)
+
+
+def mesh_config(multi_pod: bool) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD

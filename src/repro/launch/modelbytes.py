@@ -1,0 +1,71 @@
+"""Analytic per-device HBM-traffic floor (bytes/step).
+
+The HLO-parsed byte count is measured on the *CPU backend*, whose fusion
+granularity is far coarser than TPU's — elementwise chains that a TPU
+compilation would fuse into one HBM pass appear as separate buffers, so the
+parsed number systematically over-states HBM traffic. This module provides
+the transparent first-order floor:
+
+  train:   3x params_local (read fwd / read bwd / write) + grads (w+r)
+           + 2x moments (r+w each) + activation stream
+           (fwd+bwd tensor traffic per layer ~ 12 residual-sized buffers,
+            x2 more when remat recomputes the forward)
+  prefill: params read + activation stream + cache write
+  decode:  params read + full KV/state cache read + slice write
+
+Both numbers are reported in §Roofline; "attainable" roofline fraction uses
+this floor, "measured" uses the parsed HLO bytes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeSpec, TrainConfig
+
+
+def _tree_bytes(tree) -> int:
+    return sum(l.size * jax.numpy.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeSpec, n_dev: int,
+                   tcfg: TrainConfig | None = None) -> float:
+    from repro.launch import specs as S
+    p_bytes = _tree_bytes(S.params_shape(cfg)) / n_dev
+    B, seq = shape.global_batch, shape.seq_len
+    act_dtype = 2  # bf16 activations
+    d = cfg.d_model
+    L = cfg.n_layers
+    tokens_local = B * seq / n_dev
+
+    if shape.kind == "train":
+        remat = (tcfg is None) or (tcfg.remat != "none")
+        moments = 2 * p_bytes * (2 if cfg.moment_dtype == "float32"
+                                 else 1)       # m+v, r+w each
+        opt_traffic = 2 * moments
+        grads = 2 * p_bytes
+        params_traffic = 3 * p_bytes
+        per_layer_buffers = 12 * (2 if remat else 1)
+        acts = tokens_local * d * act_dtype * L * per_layer_buffers
+        logits = tokens_local * cfg.vocab_size * act_dtype * 3
+        return params_traffic + grads + opt_traffic + acts + logits
+
+    if shape.kind == "prefill":
+        acts = tokens_local * d * act_dtype * L * 8
+        cache = _cache_bytes(cfg, B, seq) / n_dev
+        return p_bytes + acts + cache
+
+    # decode: params + read whole cache + write the new slice
+    cache = _cache_bytes(cfg, B, seq) / n_dev
+    return p_bytes + cache + (B / n_dev) * d * act_dtype * L * 8
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
+    from repro.launch import specs as S
+    try:
+        tree = S.cache_shape(cfg, batch, seq)
+        return float(_tree_bytes(tree))
+    except Exception:   # encoder-only
+        return 0.0

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable,
+weak-type-correct, and never allocated (the dry-run contract).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, TrainConfig
+from repro.models import init_cache, init_params
+from repro.runtime.steps import init_train_state
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training/prefill batch as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_frames":
+        return {"frames": sds((B, S, cfg.d_model), jnp.float32),
+                "labels": sds((B, S), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        s_text = S - cfg.n_patches
+        return {"tokens": sds((B, s_text), jnp.int32),
+                "patches": sds((B, cfg.n_patches, cfg.d_model), jnp.float32),
+                "labels": sds((B, s_text), jnp.int32)}
+    return {"tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32)}
+
+
+def params_shape(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def train_state_shape(cfg: ModelConfig, tcfg: TrainConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_train_state(k, cfg, tcfg), key)
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(cache, token, pos) stand-ins for one serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    return (cache_shape(cfg, B, S), sds((B,), jnp.int32),
+            sds((), jnp.int32))
+
+
+def default_train_config(cfg: ModelConfig, shape: ShapeSpec) -> TrainConfig:
+    """Per-arch microbatching heuristic: keep activations + grad-accum
+    buffers inside 16 GB/chip for the big dense configs."""
+    n_params = param_count(cfg)
+    if n_params >= 5e10:
+        mb = 16
+    elif n_params >= 5e9:
+        mb = 8
+    elif n_params >= 1e9:
+        mb = 4
+    else:
+        mb = 1
+    mb = min(mb, shape.global_batch)
+    return TrainConfig(microbatches=mb, remat="full")
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    tree = params_shape(cfg)
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(tree))

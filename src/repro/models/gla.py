@@ -1,0 +1,115 @@
+"""Chunked gated linear attention — the shared sub-quadratic sequence mixer.
+
+Computes, per head, the causal linear-attention recurrence
+
+    h_t = exp(log_f_t) * h_{t-1} + k_t ⊗ v_t          (state: (N, P))
+    y_t = q_t · h_t
+
+in O(S·N·P) using the standard chunkwise decomposition (intra-chunk
+quadratic + inter-chunk recurrent scan). Both the Mamba2 SSD path
+(q=C, k=B, v=dt*x, log_f=dt*A) and the mLSTM path (input gate folded into
+k, normalizer folded into an augmented v column) lower onto this function,
+so its FLOPs shape the roofline of the SSM/hybrid architectures.
+
+Numerics: all decay algebra in f32; log_f must be <= 0 (a true decay) which
+keeps every exponent non-positive and the chunk math stable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q, k, v, log_f, chunk: int, initial_state=None):
+    """q,k: (B,S,H,N) v: (B,S,H,P) log_f: (B,S,H) -> y (B,S,H,P), h (B,H,N,P).
+
+    S must be divisible by ``chunk`` (callers pad).
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        # pad with decay-neutral steps: k=v=0 adds nothing to the state,
+        # log_f=0 carries it unchanged; padded y rows are dropped below.
+        pad = chunk - S % chunk
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        q, k, v, log_f = padf(q), padf(k), padf(v), padf(log_f)
+    S_pad = q.shape[1]
+    nc, c = S_pad // chunk, chunk
+
+    f32 = jnp.float32
+    qf = q.astype(f32).reshape(B, nc, c, H, N)
+    kf = k.astype(f32).reshape(B, nc, c, H, N)
+    vf = v.astype(f32).reshape(B, nc, c, H, P)
+    lf = log_f.astype(f32).reshape(B, nc, c, H)
+
+    # b_t: within-chunk cumulative log-decay (inclusive)
+    b = jnp.cumsum(lf, axis=2)                          # (B,nc,c,H)
+    b_total = b[:, :, -1]                               # (B,nc,H)
+
+    # intra-chunk: scores_ij = (q_i . k_j) * exp(b_i - b_j), j <= i
+    att = jnp.einsum("bnihd,bnjhd->bnhij", qf, kf)      # (B,nc,H,c,c)
+    bi = b.transpose(0, 1, 3, 2)                        # (B,nc,H,c)
+    dmat = bi[..., :, None] - bi[..., None, :]          # (B,nc,H,c,c)
+    mask = jnp.tril(jnp.ones((c, c), dtype=bool))
+    att = att * jnp.where(mask, jnp.exp(jnp.where(mask, dmat, 0.0)), 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", att, vf)  # (B,nc,c,H,P)
+
+    # inter-chunk carried state
+    #   contribution of chunk n to the carry: sum_j exp(b_total - b_j) k_j v_j
+    kdec = kf * jnp.exp(b_total[:, :, None] - b)[..., None]      # (B,nc,c,H,N)
+    state_add = jnp.einsum("bnchd,bnchp->bnhdp", kdec, vf)       # (B,nc,H,N,P)
+
+    if initial_state is None:
+        h0 = jnp.zeros((B, H, N, P), f32)
+    else:
+        h0 = initial_state.astype(f32)
+
+    def body(h, xs):
+        sa, btot = xs                                   # (B,H,N,P), (B,H)
+        h_out = h                                       # state *entering* chunk
+        h_next = h * jnp.exp(btot)[..., None, None] + sa
+        return h_next, h_out
+
+    xs = (state_add.transpose(1, 0, 2, 3, 4), b_total.transpose(1, 0, 2))
+    h_final, h_enter = jax.lax.scan(body, h0, xs)       # h_enter: (nc,B,H,N,P)
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)          # (B,nc,H,N,P)
+
+    # y_inter_i = exp(b_i) * q_i . h_enter
+    qdec = qf * jnp.exp(b)[..., None]                   # (B,nc,c,H,N)
+    y_inter = jnp.einsum("bnchd,bnhdp->bnchp", qdec, h_enter)
+
+    y = (y_intra + y_inter).reshape(B, S_pad, H, P)[:, :S]
+    return y.astype(v.dtype), h_final
+
+
+def gla_step(q, k, v, log_f, state):
+    """Single-token recurrent step.
+
+    q,k: (B,H,N) v: (B,H,P) log_f: (B,H) state: (B,H,N,P)
+    -> y (B,H,P), new state.
+    """
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    state = state.astype(f32) * jnp.exp(log_f.astype(f32))[..., None, None]
+    state = state + kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhd,bhdp->bhp", qf, state)
+    return y.astype(v.dtype), state
+
+
+def gla_reference(q, k, v, log_f):
+    """O(S^2)-free pure recurrent oracle (scan over time) for tests."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def body(h, xs):
+        qt, kt, vt, ft = xs
+        y, h = gla_step(qt, kt, vt, ft, h)
+        return h, y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_f.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(body, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h

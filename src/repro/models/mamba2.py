@@ -1,0 +1,142 @@
+"""Mamba2 (SSD) mixer: chunked scan for train/prefill, recurrent decode step.
+
+Structure follows the Mamba2 block: in_proj -> [z | x | B | C | dt], causal
+depthwise conv over [x|B|C], softplus(dt)+A gating, chunked SSD scan (via
+``chunked_gla``), gated RMSNorm, out_proj. Head layout: d_inner =
+expand*d_model split into heads of ``head_dim``; B/C are shared across heads
+within a group (n_groups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, dtype_of, rmsnorm
+from repro.models.gla import chunked_gla, gla_step
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * ssm.d_state + H
+    p = {
+        "in_proj": dense_init(ks[0], D, d_in_proj, pdt),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus(-2) ~ 0.13
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), pdt),
+        "out_proj": dense_init(ks[2], d_inner, D, pdt),
+    }
+    return p
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    N = ssm.d_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xbc, dt
+
+
+def _conv(xbc, w, b, state=None):
+    """Causal depthwise conv. xbc: (B,S,Cc); w: (W,Cc). state: (B,W-1,Cc)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)            # (B, S+W-1, Cc)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None, :].astype(xbc.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_state
+
+
+def mamba_apply(p, x, cfg: ModelConfig, initial_state=None):
+    """x: (B,S,D) -> (y (B,S,D), (conv_state, ssm_state))."""
+    ssm = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    N, P = ssm.d_state, ssm.head_dim
+    B_, S, D = x.shape
+    cdt = dtype_of(cfg.compute_dtype)
+
+    zxbcdt = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    conv_state_in = None if initial_state is None else initial_state[0]
+    xbc, conv_state = _conv(xbc, p["conv_w"], p["conv_b"], conv_state_in)
+
+    xs = xbc[..., :d_inner].reshape(B_, S, H, P)
+    Bmat = xbc[..., d_inner:d_inner + N]                 # (B,S,N) group-shared
+    Cmat = xbc[..., d_inner + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    A = -jnp.exp(p["A_log"])                             # (H,) negative
+    log_f = dt * A[None, None, :]                        # (B,S,H) <= 0
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B_, S, H, N))
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B_, S, H, N))
+    v = xs * dt[..., None].astype(xs.dtype)              # fold dt into v
+
+    ssm_state_in = None if initial_state is None else initial_state[1]
+    y, ssm_state = chunked_gla(q, k, v, log_f, ssm.chunk,
+                               initial_state=ssm_state_in)
+    y = y + xs * p["D_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cdt)
+    return out, (conv_state, ssm_state)
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    """One-token step. x: (B,1,D); state=(conv_state (B,W-1,Cc), ssm (B,H,N,P))."""
+    ssm = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    N, P = ssm.d_state, ssm.head_dim
+    B_ = x.shape[0]
+    cdt = dtype_of(cfg.compute_dtype)
+    conv_state, ssm_state = state
+
+    zxbcdt = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+
+    xs = xbc[:, 0, :d_inner].reshape(B_, H, P)
+    Bmat = xbc[:, 0, d_inner:d_inner + N]
+    Cmat = xbc[:, 0, d_inner + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+
+    A = -jnp.exp(p["A_log"])
+    log_f = dt * A[None, :]                              # (B,H)
+    q = jnp.broadcast_to(Cmat[:, None, :], (B_, H, N))
+    k = jnp.broadcast_to(Bmat[:, None, :], (B_, H, N))
+    v = xs * dt[..., None].astype(xs.dtype)
+    y, ssm_state = gla_step(q, k, v, log_f, ssm_state)
+    y = y + xs * p["D_skip"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cdt), (conv_state, ssm_state)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int):
+    ssm = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+    conv_state = jnp.zeros((batch, ssm.d_conv - 1, conv_dim), cdt)
+    ssm_state = jnp.zeros((batch, H, ssm.d_state, ssm.head_dim), jnp.float32)
+    return conv_state, ssm_state

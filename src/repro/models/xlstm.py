@@ -1,0 +1,199 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked) and sLSTM (scalar, recurrent).
+
+mLSTM follows the xLSTM paper's matrix-memory recurrence
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t^T q_t) / max(|n_t^T q_t|, 1)
+lowered onto the shared chunked GLA core by folding the exponential input
+gate into k and the normalizer into an augmented v column. Simplification
+(documented): instead of the paper's running max-state m_t we hard-cap the
+log input gate at +8 — equivalent stabilization for the gate ranges reached
+in training, and it keeps the chunked form a pure GLA instance.
+
+sLSTM keeps the paper's exact stabilized scalar recurrence (exponential
+gating with max-state) with block-diagonal per-head recurrent weights; it is
+inherently sequential and runs as a time scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, dtype_of, rmsnorm
+from repro.models.gla import chunked_gla, gla_step
+
+_LOG_I_CAP = 8.0
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.xlstm.expand * cfg.d_model
+    H = cfg.n_heads
+    dh = d_inner // H
+    return d_inner, H, dh
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner, H, dh = _dims(cfg)
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], D, 2 * d_inner, pdt),
+        "conv_w": (jax.random.normal(ks[1], (4, d_inner), jnp.float32)
+                   * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((d_inner,), pdt),
+        "wq": dense_init(ks[2], d_inner, d_inner, pdt),
+        "wk": dense_init(ks[3], d_inner, d_inner, pdt),
+        "wv": dense_init(ks[4], d_inner, d_inner, pdt),
+        "w_if": dense_init(ks[5], d_inner, 2 * H, pdt, scale=0.01),
+        "b_i": jnp.full((H,), -2.0, jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),
+        "norm_w": jnp.ones((d_inner,), pdt),
+        "down_proj": dense_init(ks[6], d_inner, D, pdt),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg: ModelConfig, conv_state=None):
+    """x: (B,S,D) -> q,k,v (B,S,H,dh), log_i/log_f (B,S,H), z, conv_state."""
+    from repro.models.mamba2 import _conv            # shared causal conv
+    d_inner, H, dh = _dims(cfg)
+    B, S, _ = x.shape
+    cdt = dtype_of(cfg.compute_dtype)
+    up = x.astype(cdt) @ p["up_proj"].astype(cdt)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_c, conv_state = _conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    q = (x_c @ p["wq"].astype(cdt)).reshape(B, S, H, dh)
+    k = (x_c @ p["wk"].astype(cdt)).reshape(B, S, H, dh) / jnp.sqrt(
+        jnp.asarray(dh, cdt))
+    v = (x_in @ p["wv"].astype(cdt)).reshape(B, S, H, dh)
+    gates = (x_in @ p["w_if"].astype(cdt)).astype(jnp.float32)
+    i_raw = gates[..., :H] + p["b_i"]
+    f_raw = gates[..., H:] + p["b_f"]
+    log_i = jnp.minimum(i_raw, _LOG_I_CAP)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, log_i, log_f, z, conv_state
+
+
+def _mlstm_output(p, y_aug, z, cfg: ModelConfig):
+    d_inner, H, dh = _dims(cfg)
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    shp = y_aug.shape[:-2] + (d_inner,)
+    h = h.reshape(shp)
+    cdt = dtype_of(cfg.compute_dtype)
+    h = rmsnorm(h.astype(cdt) * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return h @ p["down_proj"].astype(cdt)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, initial_state=None):
+    """x: (B,S,D) -> y (B,S,D), (conv_state, C_state)."""
+    B, S, _ = x.shape
+    d_inner, H, dh = _dims(cfg)
+    conv_in = None if initial_state is None else initial_state[0]
+    q, k, v, log_i, log_f, z, conv_state = _mlstm_qkvif(p, x, cfg, conv_in)
+    k = k * jnp.exp(log_i)[..., None].astype(k.dtype)     # fold input gate
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1)           # normalizer column
+    c_in = None if initial_state is None else initial_state[1]
+    y_aug, c_state = chunked_gla(q, k, v_aug, log_f, cfg.xlstm.chunk,
+                                 initial_state=c_in)
+    return _mlstm_output(p, y_aug, z, cfg), (conv_state, c_state)
+
+
+def mlstm_decode(p, x, state, cfg: ModelConfig):
+    """x: (B,1,D); state = (conv_state, C (B,H,dh,dh+1))."""
+    B = x.shape[0]
+    d_inner, H, dh = _dims(cfg)
+    conv_state, c_state = state
+    q, k, v, log_i, log_f, z, conv_state = _mlstm_qkvif(p, x, cfg, conv_state)
+    k = k * jnp.exp(log_i)[..., None].astype(k.dtype)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1)
+    y_aug, c_state = gla_step(q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0],
+                              c_state)
+    y = _mlstm_output(p, y_aug[:, None], z, cfg)
+    return y, (conv_state, c_state)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    d_inner, H, dh = _dims(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+    conv_state = jnp.zeros((batch, 3, d_inner), cdt)
+    c_state = jnp.zeros((batch, H, dh, dh + 1), jnp.float32)
+    return conv_state, c_state
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], D, 4 * D, pdt),
+        # block-diagonal per-head recurrent weights: (H, dh, 4*dh)
+        "r_rec": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+                  / jnp.sqrt(dh)).astype(pdt),
+        "b": jnp.concatenate([jnp.zeros((D,)), jnp.full((D,), -2.0),
+                              jnp.full((D,), 3.0), jnp.zeros((D,))]
+                             ).astype(jnp.float32),
+        "norm_w": jnp.ones((D,), pdt),
+        "out_proj": dense_init(ks[2], D, D, pdt),
+    }
+
+
+def _slstm_step(p, xt, state, cfg: ModelConfig):
+    """xt: (B,4D) pre-projected input; state = (c,n,h,m) each (B,D)."""
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    c, n, h, m = state
+    B = xt.shape[0]
+    # recurrent contribution, block-diagonal per head
+    hb = h.reshape(B, H, dh).astype(p["r_rec"].dtype)
+    rec = jnp.einsum("bhd,hde->bhe", hb, p["r_rec"]).reshape(B, 4 * D)
+    pre = (xt + rec.astype(jnp.float32)).astype(jnp.float32) + p["b"]
+    zt = jnp.tanh(pre[..., 0 * D:1 * D])
+    it = pre[..., 1 * D:2 * D]
+    ft = jax.nn.log_sigmoid(pre[..., 2 * D:3 * D])
+    ot = jax.nn.sigmoid(pre[..., 3 * D:4 * D])
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c = f_p * c + i_p * zt
+    n = f_p * n + i_p
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new)
+
+
+def slstm_apply(p, x, cfg: ModelConfig, initial_state=None):
+    """x: (B,S,D) -> y (B,S,D), final state (c,n,h,m)."""
+    B, S, D = x.shape
+    cdt = dtype_of(cfg.compute_dtype)
+    xt = (x.astype(cdt) @ p["w_in"].astype(cdt)).astype(jnp.float32)
+    state = initial_state or slstm_state_init(cfg, B)
+
+    def body(st, x_t):
+        st = _slstm_step(p, x_t, st, cfg)
+        return st, st[2]                                # emit h
+
+    state, hs = jax.lax.scan(body, state, xt.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                          # (B,S,D)
+    y = rmsnorm(hs.astype(cdt), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cdt), state
+
+
+def slstm_decode(p, x, state, cfg: ModelConfig):
+    cdt = dtype_of(cfg.compute_dtype)
+    xt = (x[:, 0].astype(cdt) @ p["w_in"].astype(cdt)).astype(jnp.float32)
+    state = _slstm_step(p, xt, state, cfg)
+    y = rmsnorm(state[2][:, None].astype(cdt), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cdt), state
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return (z, z, z, z - 10.0)   # m starts low

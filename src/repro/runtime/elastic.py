@@ -1,0 +1,43 @@
+"""Elastic scaling: reshard a live training state onto a new mesh.
+
+On a real cluster this is the preemption-resize path: a pod goes away, the
+job re-forms on (say) half the slices, reloads the latest checkpoint with
+the new shardings, and continues with a re-lowered step. Everything here is
+mesh-shape-agnostic: ``reshard_state`` works between any two meshes whose
+axis names the sharding rules understand.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.sharding import rules
+
+
+def state_shardings(state_shape, mesh, cfg: ModelConfig):
+    out = {"params": rules.param_shardings(state_shape["params"], mesh, cfg)}
+    if "opt" in state_shape:
+        out["opt"] = rules.opt_shardings(state_shape["opt"],
+                                         state_shape["params"], mesh, cfg)
+    if "ef" in state_shape:
+        out["ef"] = rules.param_shardings(state_shape["ef"], mesh, cfg)
+    return out
+
+
+def reshard_state(state, new_mesh, cfg: ModelConfig) -> Any:
+    """Move a live state pytree onto a new mesh (elastic up/down-scale)."""
+    shape = jax.eval_shape(lambda s: s, state)
+    sh = state_shardings(shape, new_mesh, cfg)
+    return jax.device_put(state, sh)
+
+
+def relower_train_step(train_step, state, batch_shape, new_mesh,
+                       cfg: ModelConfig):
+    """Re-jit the step for the new mesh's shardings."""
+    shape = jax.eval_shape(lambda s: s, state)
+    sh = state_shardings(shape, new_mesh, cfg)
+    b_sh = rules.batch_shardings(batch_shape, new_mesh)
+    return jax.jit(train_step, in_shardings=(sh, b_sh),
+                   out_shardings=(sh, None), donate_argnums=(0,))

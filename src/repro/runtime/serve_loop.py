@@ -1,0 +1,72 @@
+"""Batched serving loop (prefill + decode) with HRM on the KV cache and
+params — the paper's Memcached/WebSearch-style always-on workload."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import HRMPolicy, Injector, Scrubber
+from repro.models import init_cache
+from repro.runtime.steps import make_prefill_step, make_serve_step
+
+
+@dataclass
+class ServeReport:
+    tokens_emitted: int = 0
+    queries: int = 0
+    scrub_corrected: int = 0
+    scrub_detected: int = 0
+    injected: int = 0
+
+
+def serve_batch(cfg: ModelConfig, params, prompts: jax.Array,
+                max_new_tokens: int, *, policy: Optional[HRMPolicy] = None,
+                error_rate_per_token: float = 0.0, seed: int = 0):
+    """prompts: (B, S0) int32 -> (generated (B, max_new_tokens), report)."""
+    B, S0 = prompts.shape
+    report = ServeReport()
+    prefill = jax.jit(make_prefill_step(cfg))
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    logits_last, cache = prefill(params, {"tokens": prompts})
+    # prefill returns a cache sized S0; decode needs head-room:
+    # align KV caches (L,B,S,K,dh): prefill S0 -> padded S0+new
+    full = init_cache(cfg, B, S0 + max_new_tokens)
+    cache = jax.tree.map(
+        lambda dst, src: jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), (0,) * dst.ndim)
+        if src.shape != dst.shape else src.astype(dst.dtype),
+        full, cache)
+
+    scrubber = None
+    injector = Injector.seeded(seed)
+    rng = np.random.default_rng(seed + 1)
+    if policy is not None:
+        scrubber = Scrubber.create(params, policy)
+
+    token = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
+    pos = jnp.int32(S0)
+    out: List[jax.Array] = []
+    for t in range(max_new_tokens):
+        if error_rate_per_token > 0 and rng.random() < error_rate_per_token:
+            from repro.core.sidecar import leaf_index
+            paths = sorted(leaf_index(params))
+            params = injector.sample_into(
+                params, paths[rng.integers(len(paths))], n_errors=1)
+            report.injected += 1
+        if scrubber is not None and t > 0 and \
+                t % max(policy.scrub_interval, 1) == 0:
+            params, rep = scrubber.scrub_now(params)
+            c, u = rep.totals()
+            report.scrub_corrected += c
+            report.scrub_detected += u
+        out.append(token)
+        cache, token, pos = serve(params, cache, token, pos)
+        report.tokens_emitted += B
+    report.queries += B
+    return jnp.stack(out, axis=1), report

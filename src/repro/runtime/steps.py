@@ -1,0 +1,107 @@
+"""Step builders: the jit-compiled units the launcher lowers onto the mesh.
+
+``make_train_step``: value_and_grad + AdamW, with gradient-accumulation
+microbatching (scan) — the knob that fits the 100B+ train_4k cells into
+16 GB/chip — optional int8-EF gradient compression, and remat policy.
+
+``make_serve_step``: single-token greedy decode against the KV/SSM cache.
+``make_prefill_step``: full forward that also materializes the cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import decode_step, forward, loss_fn
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.compress import compress_grads, ef_init
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig
+                     ) -> Dict[str, Any]:
+    from repro.models import init_params
+    params = init_params(key, cfg)
+    state = {"params": params, "opt": adamw_init(params, cfg)}
+    if tcfg.grad_compress:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    nmb = tcfg.microbatches
+
+    def one_loss(params, mb):
+        return loss_fn(params, mb, cfg, remat=tcfg.remat)
+
+    def _constrain_like_params(grads):
+        """Pin gradient layout to the param shardings. Without this the
+        accumulation carry reverts to a data-replicated layout and XLA
+        all-reduces the FULL gradient every microbatch (measured: 28 TB of
+        link traffic on llama3-405b train_4k) instead of reduce-scattering
+        into shards."""
+        if not cfg.shard_hints:
+            return grads
+        from repro.sharding import rules
+        m = rules.ambient_mesh()
+        if m is None:
+            return grads
+        import jax.tree_util as jtu
+        return jtu.tree_map_with_path(
+            lambda pth, g: jax.lax.with_sharding_constraint(
+                g, rules.param_spec(pth, g.shape, m, cfg)), grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if nmb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                one_loss, has_aux=True)(params, batch)
+            grads = _constrain_like_params(grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(jnp.zeros_like, params)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(one_loss, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b, gsum, g)
+                gsum = _constrain_like_params(gsum)
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)),
+                                           mbs)
+            grads = jax.tree.map(lambda g: g / nmb, gsum)
+            loss = lsum / nmb
+            metrics = {}
+
+        new_state = {}
+        if tcfg.grad_compress:
+            grads, new_ef, _ = compress_grads(grads, state["ef"])
+            new_state["ef"] = new_ef
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"],
+                                               tcfg)
+        new_state.update({"params": new_params, "opt": new_opt})
+        return new_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _, cache = forward(params, batch, cfg, return_cache=True)
+        # return only the last position's logits (the serving handoff)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, token, pos):
+        logits, cache = decode_step(params, token, pos, cache, cfg)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, next_token, pos + 1
+    return serve_step

@@ -1,0 +1,187 @@
+"""Fault-tolerant training loop with HRM as a first-class feature.
+
+Per step:
+  1. (fault sim) soft/hard errors strike protected + unprotected regions
+  2. every ``scrub_interval`` steps: patrol scrub -> correct (SEC-DED),
+     detect (parity) -> RecoveryManager response (clean-copy reload /
+     restart), hard errors re-assert (sticky cells) until retirement
+  3. train_step (jit)
+  4. write-path ECC: re-encode the sidecar for updated regions
+  5. checkpoint every ``ckpt_interval`` (async IO overlapped with compute)
+  6. straggler detection: steps slower than ``straggler_factor`` x the
+     median are logged and the data loader skips ahead (rebalance)
+
+Node failures are simulated as RestartRequired at random steps: the loop
+restores the last checkpoint and replays — the same path a real preemption
+takes on a pod.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import (HRMPolicy, Injector, RecoveryManager, Response,
+                        RestartRequired, Scrubber)
+from repro.core.sidecar import leaf_index
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_interval: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    # fault simulation
+    error_rate_per_step: float = 0.0        # expected injected errors/step
+    hard_error_fraction: float = 0.3
+    node_failure_steps: tuple = ()          # steps at which a "node" dies
+    # straggler mitigation
+    straggler_factor: float = 3.0
+    # HRM
+    policy: Optional[HRMPolicy] = None
+    response: Response = Response.RELOAD_CLEAN_COPY
+
+
+@dataclass
+class LoopReport:
+    losses: List[float] = field(default_factory=list)
+    scrub_corrected: int = 0
+    scrub_detected: int = 0
+    recoveries: int = 0
+    restarts: int = 0
+    straggler_events: int = 0
+    injected: int = 0
+    events: List[dict] = field(default_factory=list)
+
+
+def run_training(cfg: ModelConfig, tcfg: TrainConfig, loop: LoopConfig,
+                 batch_stream, *, state=None) -> LoopReport:
+    report = LoopReport()
+    store = CheckpointStore(loop.ckpt_dir)
+    train_step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    if state is None:
+        latest = store.latest_step()
+        template = init_train_state(jax.random.PRNGKey(loop.seed), cfg, tcfg)
+        if latest is not None:
+            state = store.load(latest, template)
+            start_step = latest
+            report.events.append({"restore": latest})
+        else:
+            state = template
+            start_step = 0
+            store.save(0, state)
+    else:
+        start_step = 0
+        store.save(0, state)
+
+    policy = loop.policy
+    scrubber = None
+    recovery = None
+    injector = Injector.seeded(loop.seed + 1)
+    rng = np.random.default_rng(loop.seed + 2)
+    if policy is not None:
+        scrubber = Scrubber.create(state["params"], policy)
+        recovery = RecoveryManager(
+            clean_copy=store.clean_copy_fn(), response=loop.response)
+
+    step_times: List[float] = []
+    step = start_step
+    pending_ckpt = None
+    fired_failures = set()
+    while step < loop.steps:
+        t0 = time.time()
+        try:
+            # ---- 1. fault simulation strikes tensor memory
+            if loop.error_rate_per_step > 0:
+                n_err = rng.poisson(loop.error_rate_per_step)
+                if n_err:
+                    paths = sorted(leaf_index(state["params"]))
+                    for _ in range(n_err):
+                        p = paths[rng.integers(len(paths))]
+                        hard = rng.random() < loop.hard_error_fraction
+                        state["params"] = injector.sample_into(
+                            state["params"], p, n_errors=1, hard=hard)
+                        report.injected += 1
+
+            # ---- 2. patrol scrub + recovery
+            if scrubber is not None:
+                params, rep = scrubber.maybe_scrub(step, state["params"])
+                if rep is not None:
+                    state = {**state, "params": params}
+                    c, u = rep.totals()
+                    report.scrub_corrected += c
+                    report.scrub_detected += u
+                    if u and recovery is not None:
+                        state = {**state, "params": recovery.respond(
+                            state["params"], rep, scrubber)}
+                        report.recoveries += len(rep.needs_recovery())
+                        # repaired leaves: sticky cells retired with them
+                        for pth in rep.needs_recovery():
+                            if recovery.strike_counts.get(pth, 0) >= \
+                                    recovery.retire_after:
+                                injector.clear(pth)
+
+            # ---- simulated node failure (each failure fires once)
+            if step in loop.node_failure_steps and \
+                    step not in fired_failures:
+                fired_failures.add(step)
+                raise RestartRequired(f"node failure at step {step}")
+
+            # ---- 3. the actual training step
+            batch = next(batch_stream)
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])
+            report.losses.append(loss)
+
+            # ---- 4. write-path ECC for updated params
+            if scrubber is not None:
+                scrubber.refresh(state["params"])
+                # sticky (hard) errors re-assert on the fresh state
+                state = {**state,
+                         "params": injector.reassert_hard(state["params"])}
+
+            # ---- 5. checkpoint (async)
+            if step > 0 and step % loop.ckpt_interval == 0:
+                if pending_ckpt is not None:
+                    pending_ckpt.join()
+                pending_ckpt = store.save_async(step, state)
+                if recovery is not None:
+                    recovery.clean_copy = store.clean_copy_fn(step=None)
+
+            # ---- 6. straggler detection
+            dt = time.time() - t0
+            if len(step_times) >= 5:
+                med = float(np.median(step_times[-20:]))
+                if dt > loop.straggler_factor * med:
+                    report.straggler_events += 1
+                    report.events.append({"straggler": step, "dt": dt,
+                                          "median": med})
+            step_times.append(dt)
+            step += 1
+
+        except RestartRequired as e:
+            report.restarts += 1
+            report.events.append({"restart_at": step, "why": str(e)})
+            if pending_ckpt is not None:
+                pending_ckpt.join()
+                pending_ckpt = None
+            latest = store.latest_step()
+            template = init_train_state(jax.random.PRNGKey(loop.seed), cfg,
+                                        tcfg)
+            state = store.load(latest, template)
+            injector.clear()
+            if scrubber is not None:
+                scrubber.refresh(state["params"])
+            step = latest
+
+    if pending_ckpt is not None:
+        pending_ckpt.join()
+    return report

@@ -1,0 +1,68 @@
+"""Auto-tuned HRM policies (beyond-paper): the tuner must rediscover the
+paper's hand designs and never violate its targets."""
+import jax
+import pytest
+
+from repro.core import (WEBSEARCH, WEBSEARCH_VULN, tune_policy,
+                        vuln_from_campaign)
+from repro.core.tiers import Tier
+
+
+def test_autopolicy_rediscovers_detect_recover():
+    res = tune_policy(WEBSEARCH, WEBSEARCH_VULN,
+                      availability_target=0.9990,
+                      incorrect_target_per_million=9.5)
+    assert res.availability >= 0.9990
+    assert res.incorrect_per_million <= 9.5
+    # at least the paper's hand-designed 9.7% saving
+    assert res.memory_saving >= 0.097 - 1e-6
+    # the big tolerant region ends up on the cheap tier
+    assert res.policy.tiers["private"] in (Tier.PARITY_R, Tier.NONE)
+
+
+def test_autopolicy_beats_hand_designed_less_tested():
+    res = tune_policy(WEBSEARCH, WEBSEARCH_VULN,
+                      availability_target=0.9990,
+                      incorrect_target_per_million=12.0, less_tested=True)
+    assert res.availability >= 0.9990
+    assert res.memory_saving > 0.155      # beats Detect&Recover/L
+
+
+def test_autopolicy_tightens_with_target():
+    loose = tune_policy(WEBSEARCH, WEBSEARCH_VULN,
+                        availability_target=0.99,
+                        incorrect_target_per_million=1000.0)
+    tight = tune_policy(WEBSEARCH, WEBSEARCH_VULN,
+                        availability_target=0.9999,
+                        incorrect_target_per_million=1.0)
+    assert loose.memory_saving >= tight.memory_saving
+    assert tight.availability >= 0.9999
+
+
+def test_autopolicy_infeasible_raises():
+    with pytest.raises(ValueError):
+        tune_policy(WEBSEARCH, WEBSEARCH_VULN,
+                    availability_target=1.0,
+                    incorrect_target_per_million=0.0)
+
+
+def test_vuln_from_measured_campaign():
+    """End-to-end: measured injection campaign -> tuned policy."""
+    from repro.configs import get_tiny
+    from repro.configs.base import ShapeSpec
+    from repro.core import lm_eval_fn, region_fractions, run_campaign
+    from repro.data.synthetic import make_batch
+    from repro.models import forward, init_params
+
+    cfg = get_tiny("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, ShapeSpec("c", 32, 2, "train"))
+    ev = jax.jit(lambda p: lm_eval_fn(cfg, batch, forward)(p)[0])
+    campaign = run_campaign(lambda p: (ev(p), p), params, n_trials=16,
+                            seed=11, hard_repeat=1)
+    vuln = vuln_from_campaign(campaign)
+    profile = region_fractions(params)
+    res = tune_policy(profile, vuln, availability_target=0.999,
+                      incorrect_target_per_million=50.0)
+    assert res.availability >= 0.999
+    assert 0.0 <= res.memory_saving <= 0.2

@@ -1,0 +1,173 @@
+"""Launch-layer tests: sharding rules, HLO cost analyzer, dry-run smoke on
+an 8-device subprocess mesh (the pytest process itself stays at 1 device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPE_BY_NAME, get_config, get_tiny
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.hlo_cost import analyze, parse_module
+from repro.launch.modelflops import active_params, model_flops
+from repro.launch.specs import param_count
+
+
+# ------------------------------------------------------------ modelflops
+def test_param_counts_match_public_sizes():
+    expect = {
+        "llama3-8b": (7.5e9, 8.5e9),
+        "llama3-405b": (3.9e11, 4.2e11),
+        "qwen2-72b": (7.0e10, 7.5e10),
+        "nemotron-4-340b": (3.2e11, 3.5e11),
+        "deepseek-moe-16b": (1.5e10, 1.8e10),
+        "zamba2-2.7b": (2.2e9, 3.2e9),
+        # our mLSTM block (full d_inner q/k/v projections) lands at ~519M
+        # for the assigned 24L/1024d/4H dims; the paper's 350M uses
+        # block-diagonal projections — config-sanity band covers both
+        "xlstm-350m": (3.0e8, 5.5e8),
+        "hubert-xlarge": (8e8, 1.1e9),
+        "llava-next-mistral-7b": (6.8e9, 7.8e9),
+        "granite-moe-3b-a800m": (2.6e9, 3.9e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("deepseek-moe-16b")
+    n_act = active_params(cfg)
+    assert 2.0e9 <= n_act <= 3.5e9          # ~2.8B active (paper value)
+    assert model_flops(cfg, SHAPE_BY_NAME["train_4k"]) > 0
+
+
+# ----------------------------------------------------------- hlo parser
+def _lower_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_analyzer_counts_scan_trips():
+    w = jnp.zeros((16, 16), jnp.float32)
+    x = jnp.zeros((4, 16), jnp.float32)
+
+    def scanned(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    cost = analyze(_lower_text(scanned, w, x))
+    expect = 2 * 4 * 16 * 16 * 12
+    assert abs(cost.flops - expect) / expect < 0.01
+    assert cost.unknown_loops == 0
+
+
+def test_analyzer_counts_fused_and_nested():
+    w = jnp.zeros((8, 8), jnp.float32)
+    x = jnp.zeros((2, 8), jnp.float32)
+
+    def nested(w, x):
+        def inner(c, _):
+            return (c @ w), None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    cost = analyze(_lower_text(nested, w, x))
+    expect = 2 * 2 * 8 * 8 * 15
+    assert abs(cost.flops - expect) / expect < 0.01
+
+
+def test_collective_stats_parsing():
+    txt = """
+ENTRY %main () -> f32[] {
+  %ar = f32[1024,32]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8]
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[4,2]<=[8]
+}
+"""
+    s = collective_stats(txt)
+    assert s.ops == {"all-reduce": 1, "all-gather": 1}
+    ar = 1024 * 32 * 4
+    ag = 64 * 128 * 2
+    assert abs(s.bytes_by_type["all-reduce"] - ar) < 1
+    assert abs(s.link_bytes_by_type["all-reduce"] - ar * 2 * 3 / 4) < 1
+    assert abs(s.link_bytes_by_type["all-gather"] - ag * 1 / 2) < 1
+
+
+# --------------------------------------------------- dry-run (subprocess)
+DRYRUN_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, json
+    from repro.configs import get_tiny
+    from repro.configs.base import ShapeSpec, TrainConfig
+    from repro.launch import specs as S
+    from repro.sharding import rules
+    from repro.runtime.steps import make_train_step, make_serve_step
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    out = {}
+    for arch in ["llama3-8b", "deepseek-moe-16b", "zamba2-2.7b",
+                 "xlstm-350m", "hubert-xlarge"]:
+        cfg = get_tiny(arch)
+        shape = ShapeSpec("t", 64, 8, "train")
+        tcfg = TrainConfig(microbatches=2, remat="full")
+        st = S.train_state_shape(cfg, tcfg)
+        p_sh = rules.param_shardings(st["params"], mesh, cfg)
+        st_sh = {"params": p_sh,
+                 "opt": rules.opt_shardings(st["opt"], st["params"], mesh,
+                                            cfg)}
+        b = S.batch_specs(cfg, shape)
+        b_sh = rules.batch_shardings(b, mesh)
+        with mesh:
+            c = jax.jit(make_train_step(cfg, tcfg),
+                        in_shardings=(st_sh, b_sh),
+                        out_shardings=(st_sh, None),
+                        donate_argnums=(0,)).lower(st, b).compile()
+        out[arch] = c.cost_analysis().get("flops", 0) > 0
+    print(json.dumps(out))
+""")
+
+
+def test_dryrun_tiny_mesh_subprocess():
+    """Full lower+compile of 5 families on an 8-device mesh, out of proc
+    so pytest keeps its single-device jax runtime."""
+    r = subprocess.run([sys.executable, "-c", DRYRUN_SNIPPET],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(out.values()), out
+
+
+def test_production_mesh_function_shapes():
+    from repro.launch.mesh import make_production_mesh  # noqa: F401
+    import inspect
+    src = inspect.getsource(make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src or \
+        "('pod', 'data', 'model')" in src
+
+
+def test_dryrun_results_green():
+    """Every non-skip cell of the committed dry-run results must be ok."""
+    import pathlib
+    p = pathlib.Path("results/dryrun.json")
+    if not p.exists():
+        pytest.skip("dry-run results not generated yet")
+    data = json.loads(p.read_text())
+    bad = {k: v.get("error") for k, v in data.items()
+           if v.get("status") not in ("ok", "skip")}
+    assert not bad, bad
+    # coverage: every assigned arch x shape x both meshes present
+    from repro.configs import ASSIGNED_ARCHS, SHAPES
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                assert f"{arch}|{shape.name}|{mesh}" in data

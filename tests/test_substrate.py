@@ -1,0 +1,172 @@
+"""Substrate tests: optimizer, compression, checkpoint store, data pipeline,
+fault-tolerant train loop, serve loop, elastic resharding."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import get_tiny
+from repro.configs.base import ShapeSpec, TrainConfig
+from repro.core import Response, detect_recover, typical_server
+from repro.data.synthetic import batch_stream, make_batch
+from repro.models import init_params
+from repro.optim.adamw import adamw_init, adamw_update, global_norm
+from repro.optim.compress import compress_grads, ef_init, quantize_leaf
+from repro.runtime.steps import init_train_state, make_train_step
+from repro.runtime.train_loop import LoopConfig, run_training
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_tiny("lm-100m")
+
+
+# ---------------------------------------------------------------- optim
+def test_adamw_reduces_loss(cfg):
+    tcfg = TrainConfig(lr=1e-2, remat="none")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    batch = make_batch(cfg, ShapeSpec("b", 64, 4, "train"))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    losses = []
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_microbatch_grads_match_full(cfg):
+    """Gradient accumulation must not change the update direction."""
+    batch = make_batch(cfg, ShapeSpec("b", 32, 8, "train"))
+    t1 = TrainConfig(remat="none", microbatches=1)
+    t4 = TrainConfig(remat="none", microbatches=4)
+    s1 = init_train_state(jax.random.PRNGKey(0), cfg, t1)
+    s4 = jax.tree.map(lambda a: a, s1)
+    s1b, m1 = jax.jit(make_train_step(cfg, t1))(s1, batch)
+    s4b, m4 = jax.jit(make_train_step(cfg, t4))(s4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-3)
+    l1 = jax.tree.leaves(s1b["params"])
+    l4 = jax.tree.leaves(s4b["params"])
+    for a, b in zip(l1, l4):
+        # f32 accumulation-order differences only
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), scale=st.floats(1e-6, 1e3))
+def test_int8_compression_error_feedback(seed, scale):
+    """Quantization residual is bounded by one step size; EF carries it."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    ef = jnp.zeros((64,))
+    q, s, ef2 = quantize_leaf(g, ef)
+    deq = q.astype(jnp.float32) * s
+    assert float(jnp.max(jnp.abs(g - deq))) <= float(s) * 0.5 + 1e-6
+    # residual equals what EF stores
+    np.testing.assert_allclose(np.asarray(ef2), np.asarray(g - deq),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_compress_grads_pytree(cfg):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    ef = ef_init(grads)
+    out, ef2, saved = compress_grads(grads, ef)
+    assert jax.tree.structure(out) == jax.tree.structure(grads)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(grads)):
+        np.testing.assert_allclose(np.asarray(a, dtype=np.float32),
+                                   np.asarray(b, dtype=np.float32),
+                                   rtol=0.02, atol=1e-5)
+
+
+def test_global_norm_clipping(cfg):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainConfig(grad_clip=0.001, remat="none")
+    opt = adamw_init(params, cfg)
+    big = jax.tree.map(lambda p: jnp.full_like(p, 100.0), params)
+    _, _, metrics = adamw_update(params, big, opt, tcfg)
+    assert float(metrics["grad_norm"]) > 1000
+
+
+# ----------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path, cfg):
+    store = CheckpointStore(tmp_path, keep=2)
+    tcfg = TrainConfig(remat="none")
+    state = init_train_state(jax.random.PRNGKey(1), cfg, tcfg)
+    store.save(3, state)
+    store.save(7, state)
+    store.save(9, state)
+    assert store.steps() == [7, 9]          # keep=2 GC'd step 3
+    restored = store.load(9, state)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        assert a.dtype == b.dtype
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_checkpoint_clean_copy(tmp_path, cfg):
+    store = CheckpointStore(tmp_path)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    store.save(1, {"params": params})
+    fn = store.clean_copy_fn()
+    from repro.core.sidecar import leaf_index
+    for pstr, info in list(leaf_index(params).items())[:3]:
+        leaf = fn(pstr)
+        assert (np.asarray(leaf) == np.asarray(info["leaf"])).all()
+
+
+def test_checkpoint_bf16_preserved(tmp_path):
+    store = CheckpointStore(tmp_path)
+    state = {"w": jnp.arange(8, dtype=jnp.bfloat16) * 0.1}
+    store.save(0, state)
+    restored = store.load(0, state)
+    assert restored["w"].dtype == jnp.bfloat16
+    assert (np.asarray(restored["w"]) == np.asarray(state["w"])).all()
+
+
+# ------------------------------------------------------------ pipeline
+def test_data_stream_deterministic(cfg):
+    a = next(batch_stream(cfg, 4, 32, seed=5))
+    b = next(batch_stream(cfg, 4, 32, seed=5))
+    assert (np.asarray(a["tokens"]) == np.asarray(b["tokens"])).all()
+    c = next(batch_stream(cfg, 4, 32, seed=6))
+    assert not (np.asarray(a["tokens"]) == np.asarray(c["tokens"])).all()
+
+
+# -------------------------------------------------------------- loops
+def test_train_loop_with_faults_and_restart(tmp_path, cfg):
+    tcfg = TrainConfig(remat="none")
+    policy = detect_recover()
+    object.__setattr__(policy, "scrub_interval", 4)
+    loop = LoopConfig(steps=14, ckpt_interval=5, ckpt_dir=str(tmp_path),
+                      error_rate_per_step=0.5, node_failure_steps=(8,),
+                      policy=policy, response=Response.RELOAD_CLEAN_COPY,
+                      seed=3)
+    report = run_training(cfg, tcfg, loop, batch_stream(cfg, 4, 32))
+    assert report.restarts == 1
+    assert report.injected > 0
+    assert len(report.losses) >= 14
+    assert all(np.isfinite(report.losses))
+
+
+def test_train_loop_secded_corrects(tmp_path, cfg):
+    tcfg = TrainConfig(remat="none")
+    policy = typical_server()
+    object.__setattr__(policy, "scrub_interval", 2)
+    loop = LoopConfig(steps=8, ckpt_interval=4, ckpt_dir=str(tmp_path),
+                      error_rate_per_step=1.0, policy=policy, seed=4)
+    report = run_training(cfg, tcfg, loop, batch_stream(cfg, 4, 32))
+    assert report.scrub_corrected > 0
+
+
+def test_serve_loop(cfg):
+    from repro.runtime.serve_loop import serve_batch
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    toks, report = serve_batch(cfg, params, prompts, 4)
+    assert toks.shape == (2, 4)
+    assert report.tokens_emitted == 8

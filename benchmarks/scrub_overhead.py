@@ -1,8 +1,14 @@
 """Scrub/encode overhead vs training step time — the performance dimension
 the paper's §1 raises (error handling must not cost 2000x a memory access).
 
-Measures one train step of the lm-100m example model vs SEC-DED
-encode/scrub passes over its parameters at several scrub strides, and
+Measures one train step of the lm-100m example model against
+
+  * the legacy per-leaf scrub (``Scrubber``: one Pallas dispatch per leaf
+    plus an O(n_leaves^2) re-flatten), and
+  * the tier-grouped batched ``MemoryDomain`` scrub (same-tier leaves
+    concatenated, one dispatch per tier, single ``tree_unflatten``),
+
+plus the write-path re-encode both sides pay every optimizer update, and
 derives the steady-state overhead % for a given scrub interval.
 """
 from __future__ import annotations
@@ -14,7 +20,7 @@ import jax
 from benchmarks.common import Row, time_call
 from repro.configs import get_tiny
 from repro.configs.base import ShapeSpec, TrainConfig
-from repro.core import Scrubber, state_bytes, typical_server
+from repro.core import MemoryDomain, Scrubber, state_bytes, typical_server
 from repro.data.synthetic import make_batch
 from repro.runtime.steps import init_train_state, make_train_step
 
@@ -31,19 +37,41 @@ def run() -> List[Row]:
     rows = [Row("scrub/train_step", us_step,
                 f"params_bytes={state_bytes(state['params'])}")]
     pol = typical_server()
+
+    # ---- legacy per-leaf path (deprecated Scrubber)
     scrubber = Scrubber.create(state["params"], pol)
     us_scrub = time_call(lambda: scrubber.scrub_now(state["params"])[0],
                          warmup=1, iters=3)
-    rows.append(Row("scrub/full_pass", us_scrub,
+    rows.append(Row("scrub/per_leaf_full_pass", us_scrub,
                     f"ratio_vs_step={us_scrub / us_step:.3f}"))
+    us_reencode = time_call(
+        lambda: (scrubber.refresh(state["params"]), scrubber.sidecar)[1],
+        warmup=1, iters=3)
+    rows.append(Row("scrub/per_leaf_reencode", us_reencode,
+                    f"ratio_vs_step={us_reencode / us_step:.3f}"))
+
+    # ---- tier-grouped batched path (MemoryDomain)
+    domain = MemoryDomain.protect(state["params"], pol)
+    us_dom = time_call(lambda: domain.scrub()[0].payload, warmup=1, iters=3)
+    rows.append(Row("scrub/domain_full_pass", us_dom,
+                    f"speedup_vs_per_leaf={us_scrub / us_dom:.2f}x"))
+    us_dom_enc = time_call(lambda: domain.refresh().sidecar, warmup=1,
+                           iters=3)
+    rows.append(Row("scrub/domain_reencode", us_dom_enc,
+                    f"speedup_vs_per_leaf={us_reencode / us_dom_enc:.2f}x"))
+
     for interval in (10, 50, 100):
-        ov = us_scrub / (us_step * interval)
+        ov = us_dom / (us_step * interval)
         rows.append(Row(f"scrub/overhead_interval_{interval}", 0.0,
                         f"steady_state_overhead={ov:.4%}"))
+
+    # partial scrub: round-robin subsets bound per-pass cost (the stride
+    # knob of the legacy Scrubber, expressed as a path subset)
+    paths = domain.paths(protected_only=True)
     for stride in (2, 4):
-        s2 = Scrubber.create(state["params"], pol, stride=stride)
-        us_s = time_call(lambda: s2.scrub_now(state["params"])[0],
+        subset = paths[::stride]
+        us_s = time_call(lambda: domain.scrub(paths=subset)[0].payload,
                          warmup=1, iters=3)
-        rows.append(Row(f"scrub/stride_{stride}", us_s,
-                        f"fraction_of_full={us_s / us_scrub:.3f}"))
+        rows.append(Row(f"scrub/domain_stride_{stride}", us_s,
+                        f"fraction_of_full={us_s / us_dom:.3f}"))
     return rows

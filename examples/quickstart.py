@@ -1,53 +1,50 @@
-"""Quickstart: the HRM public API in ~60 lines.
+"""Quickstart: the unified memory-domain API in ~60 lines.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_tiny
-from repro.core import (Injector, RecoveryManager, Scrubber, detect_recover,
+from repro.core import (MemoryDomain, detect_recover,
                         paper_design_availability, paper_design_costs,
-                        region_fractions, typical_server)
-from repro.core.sidecar import leaf_index
-from repro.models import forward, init_params
+                        typical_server)
+from repro.models import init_params
 
-# 1. a model's state is a set of HRM *regions* with measured byte fractions
+# 1. a model's state is a set of HRM *regions*; MemoryDomain.protect
+#    classifies every leaf and materializes the policy's ECC sidecars
 cfg = get_tiny("llama3-8b")
 params = init_params(jax.random.PRNGKey(0), cfg)
-print("regions:", {k: round(v, 3)
-                   for k, v in region_fractions(params).fractions.items()})
+domain = MemoryDomain.protect(params, typical_server())
+print(domain)
+stats = domain.stats()
+print("regions:", {r: round(b / stats.payload_bytes, 3)
+                   for r, b in stats.region_bytes.items()})
+print("sidecar overhead:", f"{stats.overhead:.2%}")
 
-# 2. pick a reliability policy (here: the paper's Typical Server = SEC-DED
-#    everywhere) and build the ECC sidecar
-policy = typical_server()
-scrubber = Scrubber.create(params, policy)
+# 2. a cosmic ray strikes a weight...
+rng = np.random.default_rng(7)
+corrupted, events = domain.inject(rng, 1)
+print("struck:", events[0]["path"])
 
-# 3. a cosmic ray strikes a weight...
-inj = Injector.seeded(7)
-path = sorted(leaf_index(params))[0]
-corrupted = inj.sample_into(params, path, n_errors=1)
-delta = jax.tree.map(lambda a, b: jnp.sum(a != b), corrupted, params)
-print("flipped weights:", sum(jax.tree.leaves(delta)))
-
-# 4. ...the scheduled scrub corrects it in place
-fixed, report = scrubber.scrub_now(corrupted)
+# 3. ...the scheduled scrub corrects it in place — one tier-batched
+#    Pallas pass over every protected leaf, all roots at once
+fixed, report = corrupted.scrub()
 print("scrub report: corrected=%d uncorrectable=%d" % report.totals())
-restored = all(jax.tree.leaves(
-    jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), fixed, params)))
+restored = all(jax.tree.leaves(jax.tree.map(
+    lambda a, b: bool(jnp.array_equal(a, b)), fixed.payload, params)))
 print("bit-exact restore:", restored)
 
-# 5. with the cheaper Par+R policy, detection triggers a clean-copy reload
-par_policy = detect_recover()
-scrub2 = Scrubber.create(params, par_policy)
-corrupted = inj.sample_into(params, path, n_errors=1)
-_, rep = scrub2.scrub_now(corrupted)
-clean = {p: i["leaf"] for p, i in leaf_index(params).items()}
-rm = RecoveryManager(clean_copy=lambda p: clean[p])
-recovered = rm.respond(corrupted, rep, scrub2)
-print("Par+R events:", rm.events)
+# 4. with the cheaper Par+R policy, detection triggers a clean-copy reload
+par_domain = MemoryDomain.protect(params, detect_recover())
+clean = {p: par_domain.leaf(p) for p in par_domain.paths()}
+corrupted2, _ = par_domain.inject(rng, 1)
+scrubbed, rep = corrupted2.scrub()
+recovered, rec_events = scrubbed.recover(rep, clean_copy=lambda p: clean[p])
+print("Par+R events:", rec_events)
 
-# 6. the Fig-5 economics: what each design point costs and delivers
+# 5. the Fig-5 economics: what each design point costs and delivers
 costs, avail = paper_design_costs(), paper_design_availability()
 for name in costs:
     print(f"  {name:18s} server_saving={costs[name].server_saving:6.2%} "

@@ -23,6 +23,7 @@ toks, report = serve_batch(cfg, params, prompts, max_new_tokens=12,
 print("generated tokens:\n", toks.tolist())
 print(f"queries={report.queries} tokens={report.tokens_emitted} "
       f"injected={report.injected} detected={report.scrub_detected} "
-      f"corrected={report.scrub_corrected}")
+      f"corrected={report.scrub_corrected} "
+      f"sidecar_overhead={report.sidecar_overhead:.2%}")
 assert toks.shape == (4, 12)
 print("SERVE_KV OK")

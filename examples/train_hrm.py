@@ -59,6 +59,11 @@ def main():
     print(f"clean-copy recoveries:{report.recoveries}")
     print(f"restarts (node fail): {report.restarts}")
     print(f"straggler events:     {report.straggler_events}")
+    ds = report.domain_stats
+    print(f"memory domain:        {ds['protected_leaves']} leaves, "
+          f"sidecar {ds['sidecar_bytes']}B "
+          f"({ds['overhead']:.2%} of {ds['payload_bytes']}B), "
+          f"{ds['live_hard_errors']} live hard errors")
     assert last < first, "training must make progress despite faults"
     assert report.restarts >= 1, "the node-failure drill must have fired"
     print("TRAIN_HRM OK")

@@ -1,8 +1,27 @@
 """Heterogeneous-Reliability Memory (HRM) — the paper's contribution as a
-composable JAX module: tiers, policies, sidecar ECC, scrubbing, recovery,
-error injection/characterization, and the cost/availability models."""
+composable JAX module.
+
+The front door is ``MemoryDomain`` (``core.domain``): one pytree-native
+object owning payload + ECC sidecar + policy + hard-error map across every
+protected root (``params``, ``opt/m``, ``opt/v``, ``kv_cache``), with the
+verb API ``protect`` / ``scrub`` / ``recover`` / ``inject`` / ``refresh`` /
+``stats`` and tier-grouped batched Pallas execution.
+
+Supporting pieces: reliability tiers and the Table-1 capacity numbers
+(``tiers``), region->tier policies and the five paper design points
+(``policy``), error models and injection plans (``errormodel``), the Fig.2
+characterization campaign (``characterize``), the Fig.5 cost/availability
+models (``costmodel``/``availability``), and the beyond-paper policy
+auto-tuner (``autopolicy``). The legacy per-leaf path (``build_sidecar`` /
+``scrub`` / ``Scrubber``) is kept as a deprecated shim and as the reference
+implementation the batched path is verified bit-identical against.
+"""
 from repro.core.autopolicy import (  # noqa: F401
-    AutoPolicyResult, tune_policy, vuln_from_campaign,
+    AutoPolicyResult, tune_policy, tune_policy_for_domain,
+    vuln_from_campaign,
+)
+from repro.core.domain import (  # noqa: F401
+    DomainSpec, DomainStats, LeafSpec, MemoryDomain,
 )
 from repro.core.availability import (  # noqa: F401
     AvailabilityResult, VulnProfile, WEBSEARCH_VULN, evaluate_availability,

@@ -115,3 +115,19 @@ def tune_policy(profile: RegionProfile, vuln: VulnProfile, *,
         crashes_per_month=res.crashes_per_month,
         incorrect_per_million=res.incorrect_per_million,
     )
+
+
+def tune_policy_for_domain(domain, vuln, **kwargs) -> AutoPolicyResult:
+    """Tune a policy for a live ``MemoryDomain``: the region byte profile
+    is *measured* from the domain's own leaf table (all roots included),
+    so a multi-root domain (params + optimizer moments + KV cache) is
+    tuned over exactly the bytes it protects.
+
+    ``vuln`` is a ``VulnProfile`` or a ``CampaignResult`` (converted via
+    ``vuln_from_campaign``). Returns the same ``AutoPolicyResult`` as
+    ``tune_policy``; re-protect with
+    ``MemoryDomain.protect(domain.state, result.policy)``.
+    """
+    if isinstance(vuln, CampaignResult):
+        vuln = vuln_from_campaign(vuln)
+    return tune_policy(domain.region_profile(), vuln, **kwargs)

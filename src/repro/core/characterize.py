@@ -23,11 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.domain import MemoryDomain
 from repro.core.errormodel import InjectionPlan
-from repro.core.injection import Injector
-from repro.core.sidecar import _set_leaf, leaf_index
+from repro.core.policy import HRMPolicy
 from repro.core.taxonomy import Outcome, OutcomeStats
-from repro.kernels import ops
+from repro.kernels.ops import LANES
 
 
 @dataclass
@@ -91,41 +91,54 @@ def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
 
     Hard errors are re-asserted ``hard_repeat`` times (re-applied after each
     of ``hard_repeat`` consecutive queries) — a sticky cell keeps biting.
+
+    ``state`` may be a plain pytree or a live ``MemoryDomain`` (its payload
+    is characterized; ``root`` is ignored in that case since the domain
+    already classified every leaf).
     """
     rng = np.random.default_rng(seed)
-    idx = leaf_index(state, root)
-    paths = [p for p, info in idx.items()
-             if region_filter is None or region_filter(info["region"])]
+    if isinstance(state, MemoryDomain):
+        domain, wrapped = state, False
+    else:
+        # an index-only domain: the leaf table without materialized tiers
+        wrapped = root != "params"
+        domain = MemoryDomain.protect(
+            {root: state} if wrapped else state,
+            HRMPolicy(f"campaign/{root}", {}))
+    unwrap = (lambda p: p[root]) if wrapped else (lambda p: p)
+    specs = [s for s in domain.spec.protectable
+             if region_filter is None or region_filter(s.region)]
     # sample leaves weighted by byte size (errors strike uniformly over bytes)
-    weights = np.array([idx[p]["leaf"].size * idx[p]["leaf"].dtype.itemsize
-                        for p in paths], dtype=np.float64)
+    weights = np.array([s.nbytes for s in specs], dtype=np.float64)
     weights = weights / weights.sum()
 
-    golden_out, _ = eval_fn(state)
+    golden_out, _ = eval_fn(unwrap(domain.payload))
     golden_out = np.asarray(golden_out)
     result = CampaignResult()
+
+    def leaf_of(tree, pos):
+        return jax.tree_util.tree_leaves(tree)[pos]
 
     for kind in kinds:
         hard = kind == "hard"
         for t in range(n_trials):
-            path = paths[rng.choice(len(paths), p=weights)]
-            region = idx[path]["region"]
-            clean_leaf = idx[path]["leaf"]
-            n_words = ops.words_per_tensor(clean_leaf)
-            plan = InjectionPlan.sample(rng, n_words, errors_per_trial, hard)
-            corrupted = Injector.apply_plan(state, path, plan)
+            s = specs[rng.choice(len(specs), p=weights)]
+            clean_leaf = domain.leaf(s.path)
+            plan = InjectionPlan.sample(rng, s.rows * LANES,
+                                        errors_per_trial, hard)
+            corrupted = domain.apply_plan(s.path, plan)
             outcome = None
             reps = hard_repeat if hard else 1
             for r in range(reps):
                 crashed = False
-                out, final_state = None, corrupted
+                out, final_state = None, unwrap(corrupted.payload)
                 try:
-                    out, final_state = eval_fn(corrupted)
+                    out, final_state = eval_fn(unwrap(corrupted.payload))
                     crashed = not _finite(jnp.asarray(out).astype(jnp.float32))
                 except (FloatingPointError, ZeroDivisionError, ValueError,
                         RuntimeError):
                     crashed = True
-                final_leaf = leaf_index(final_state, root)[path]["leaf"] \
+                final_leaf = leaf_of(final_state, s.pos) \
                     if final_state is not None else clean_leaf
                 o = classify_trial(golden_out, out if out is not None else
                                    golden_out + 1, clean_leaf, final_leaf,
@@ -136,8 +149,10 @@ def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
                 if outcome is None or order.index(o) > order.index(outcome):
                     outcome = o
                 if hard and r + 1 < reps:
-                    corrupted = Injector.apply_plan(final_state, path, plan)
-            result.stat(region, kind).add(outcome)
+                    corrupted = domain.adopt(
+                        {root: final_state} if wrapped else final_state
+                    ).apply_plan(s.path, plan)
+            result.stat(s.region, kind).add(outcome)
     return result
 
 

@@ -5,6 +5,12 @@ An ``Injector`` owns a set of live errors. Soft errors flip once; hard
 errors are *sticky*: they re-assert after every program write to the
 location (emulating a damaged cell), which the injector realizes by
 re-applying the flip after every step/scrub.
+
+.. deprecated::
+    ``Injector`` re-indexes the state pytree on every strike. New code
+    should use ``core.domain.MemoryDomain.inject`` — the domain owns the
+    hard-error map, samples byte-weighted over its cached leaf table, and
+    re-asserts sticky cells via ``domain.reassert_hard()``.
 """
 from __future__ import annotations
 

@@ -11,6 +11,11 @@
                      analogue for recurring hard errors).
   RESTART            abandon the step and restart from the last checkpoint.
   CONSUME            do nothing (measurement mode).
+
+``Response``, ``RestartRequired`` and ``RetirementMap`` are shared with
+the unified API; ``RecoveryManager`` itself is the legacy per-leaf driver —
+new code should use ``core.domain.MemoryDomain.recover``, which reloads,
+re-encodes the touched sidecar rows, and retires sticky cells in one call.
 """
 from __future__ import annotations
 

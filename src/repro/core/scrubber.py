@@ -1,5 +1,12 @@
 """Scrub scheduling: the TPU analogue of background DRAM scrubbing.
 
+.. deprecated::
+    ``Scrubber`` drives the legacy per-leaf scrub over a single root. Use
+    ``core.domain.MemoryDomain`` instead: ``domain.scrub(step)`` covers the
+    schedule, ``domain.refresh(state)`` the write path, with tier-batched
+    kernels and a single re-flatten. ``Scrubber.create`` remains as a thin
+    shim so existing callers keep working.
+
 The paper's hardware ECC checks every access; a framework-level sidecar
 can't intercept loads, so protection is realized as a *scrub pass* run every
 ``policy.scrub_interval`` training steps (and on demand before checkpoints).

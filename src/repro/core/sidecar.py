@@ -1,5 +1,12 @@
 """ECC/parity sidecar: the software realization of the HRM hardware tiers.
 
+.. deprecated::
+    ``build_sidecar``/``scrub`` are the legacy *per-leaf* path, kept as the
+    reference implementation the batched ``core.domain.MemoryDomain`` is
+    tested bit-identical against. New code should use
+    ``MemoryDomain.protect(...)`` — one object, all roots, one Pallas
+    dispatch per tier instead of per leaf.
+
 ``build_sidecar(state, policy, root)`` walks a state pytree, classifies each
 leaf into an HRM region, and materializes that region's tier:
 
@@ -26,6 +33,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import HRMPolicy, classify_path
 from repro.core.tiers import Tier
@@ -91,13 +99,25 @@ class ScrubReport:
     detected_uncorrectable: Dict[str, jax.Array] = field(default_factory=dict)
 
     def totals(self) -> Tuple[int, int]:
-        c = sum(int(v) for v in self.corrected.values())
-        u = sum(int(v) for v in self.detected_uncorrectable.values())
-        return c, u
+        """(n_corrected, n_detected_uncorrectable) — accumulated on-device
+        and fetched with a single host sync, not one sync per leaf."""
+        n_c = len(self.corrected)
+        vals = list(self.corrected.values()) + \
+            list(self.detected_uncorrectable.values())
+        if not vals:
+            return 0, 0
+        counts = np.asarray(jnp.stack(
+            [jnp.asarray(v, jnp.int32) for v in vals]))
+        return int(counts[:n_c].sum()), int(counts[n_c:].sum())
 
     def needs_recovery(self) -> Dict[str, int]:
-        return {k: int(v) for k, v in self.detected_uncorrectable.items()
-                if int(v) > 0}
+        if not self.detected_uncorrectable:
+            return {}
+        keys = list(self.detected_uncorrectable)
+        counts = np.asarray(jnp.stack(
+            [jnp.asarray(self.detected_uncorrectable[k], jnp.int32)
+             for k in keys]))
+        return {k: int(n) for k, n in zip(keys, counts) if n > 0}
 
 
 def _set_leaf(state, pstr: str, value):

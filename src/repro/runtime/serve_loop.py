@@ -1,16 +1,22 @@
-"""Batched serving loop (prefill + decode) with HRM on the KV cache and
-params — the paper's Memcached/WebSearch-style always-on workload."""
+"""Batched serving loop (prefill + decode) with HRM on the params — the
+paper's Memcached/WebSearch-style always-on workload.
+
+The loop owns one ``MemoryDomain`` over the params root. The domain's leaf
+table (and its byte-weighted strike distribution) is built once at protect
+time, so the per-token injection branch no longer re-indexes the params
+pytree on every decode step; scrubbing is the tier-batched path.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import HRMPolicy, Injector, Scrubber
+from repro.core import HRMPolicy, MemoryDomain
 from repro.models import init_cache
 from repro.runtime.steps import make_prefill_step, make_serve_step
 
@@ -22,6 +28,7 @@ class ServeReport:
     scrub_corrected: int = 0
     scrub_detected: int = 0
     injected: int = 0
+    sidecar_overhead: float = 0.0
 
 
 def serve_batch(cfg: ModelConfig, params, prompts: jax.Array,
@@ -43,30 +50,27 @@ def serve_batch(cfg: ModelConfig, params, prompts: jax.Array,
         if src.shape != dst.shape else src.astype(dst.dtype),
         full, cache)
 
-    scrubber = None
-    injector = Injector.seeded(seed)
+    # leaf table + sidecars built once — nothing re-indexes in the token loop
+    domain = MemoryDomain.protect(
+        params, policy if policy is not None else HRMPolicy("unprotected", {}))
+    report.sidecar_overhead = domain.stats().overhead
     rng = np.random.default_rng(seed + 1)
-    if policy is not None:
-        scrubber = Scrubber.create(params, policy)
 
     token = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
     pos = jnp.int32(S0)
     out: List[jax.Array] = []
     for t in range(max_new_tokens):
         if error_rate_per_token > 0 and rng.random() < error_rate_per_token:
-            from repro.core.sidecar import leaf_index
-            paths = sorted(leaf_index(params))
-            params = injector.sample_into(
-                params, paths[rng.integers(len(paths))], n_errors=1)
-            report.injected += 1
-        if scrubber is not None and t > 0 and \
+            domain, ev = domain.inject(rng, 1)
+            report.injected += len(ev)
+        if policy is not None and t > 0 and \
                 t % max(policy.scrub_interval, 1) == 0:
-            params, rep = scrubber.scrub_now(params)
+            domain, rep = domain.scrub()
             c, u = rep.totals()
             report.scrub_corrected += c
             report.scrub_detected += u
         out.append(token)
-        cache, token, pos = serve(params, cache, token, pos)
+        cache, token, pos = serve(domain.payload, cache, token, pos)
         report.tokens_emitted += B
     report.queries += B
     return jnp.stack(out, axis=1), report

@@ -1,12 +1,18 @@
 """Fault-tolerant training loop with HRM as a first-class feature.
 
-Per step:
+The loop owns one ``MemoryDomain`` protecting the configured roots of the
+train state (``params`` by default; add ``"opt"`` to ``protect_roots`` to
+cover optimizer moments too). Per step:
+
   1. (fault sim) soft/hard errors strike protected + unprotected regions
-  2. every ``scrub_interval`` steps: patrol scrub -> correct (SEC-DED),
-     detect (parity) -> RecoveryManager response (clean-copy reload /
-     restart), hard errors re-assert (sticky cells) until retirement
+     (``domain.inject``, byte-weighted like real strikes)
+  2. every ``policy.scrub_interval`` steps: patrol scrub — one tier-batched
+     Pallas pass (``domain.scrub``) — corrects (SEC-DED), detects (parity),
+     and ``domain.recover`` reloads clean copies / raises restart; recurring
+     hard errors escalate to block retirement, which clears sticky cells
   3. train_step (jit)
-  4. write-path ECC: re-encode the sidecar for updated regions
+  4. write-path ECC: ``domain.refresh`` re-encodes the sidecars for the
+     updated roots in one batched encode per tier; sticky cells re-assert
   5. checkpoint every ``ckpt_interval`` (async IO overlapped with compute)
   6. straggler detection: steps slower than ``straggler_factor`` x the
      median are logged and the data loader skips ahead (rebalance)
@@ -19,16 +25,15 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.core import (HRMPolicy, Injector, RecoveryManager, Response,
-                        RestartRequired, Scrubber)
-from repro.core.sidecar import leaf_index
+from repro.core import (HRMPolicy, MemoryDomain, Response, RestartRequired,
+                        RetirementMap)
 from repro.runtime.steps import init_train_state, make_train_step
 
 
@@ -47,6 +52,7 @@ class LoopConfig:
     # HRM
     policy: Optional[HRMPolicy] = None
     response: Response = Response.RELOAD_CLEAN_COPY
+    protect_roots: Tuple[str, ...] = ("params",)
 
 
 @dataclass
@@ -59,6 +65,11 @@ class LoopReport:
     straggler_events: int = 0
     injected: int = 0
     events: List[dict] = field(default_factory=list)
+    domain_stats: Optional[dict] = None
+
+
+def _sub(state, roots) -> Dict[str, Any]:
+    return {r: state[r] for r in roots}
 
 
 def run_training(cfg: ModelConfig, tcfg: TrainConfig, loop: LoopConfig,
@@ -83,14 +94,19 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, loop: LoopConfig,
         store.save(0, state)
 
     policy = loop.policy
-    scrubber = None
-    recovery = None
-    injector = Injector.seeded(loop.seed + 1)
+    roots = tuple(r for r in loop.protect_roots if r in state)
+    # with no policy the domain still carries the leaf table + hard-error
+    # map for fault simulation; no sidecar is materialized
+    domain = MemoryDomain.protect(
+        _sub(state, roots),
+        policy if policy is not None else HRMPolicy("unprotected", {}))
+    strikes: Dict[str, int] = {}
+    retirement = RetirementMap()
+    clean_copy = store.clean_copy_fn() if policy is not None else None
     rng = np.random.default_rng(loop.seed + 2)
-    if policy is not None:
-        scrubber = Scrubber.create(state["params"], policy)
-        recovery = RecoveryManager(
-            clean_copy=store.clean_copy_fn(), response=loop.response)
+
+    def sync(st, dom):
+        return {**st, **{r: dom.root(r) for r in roots}}
 
     step_times: List[float] = []
     step = start_step
@@ -102,32 +118,30 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, loop: LoopConfig,
             # ---- 1. fault simulation strikes tensor memory
             if loop.error_rate_per_step > 0:
                 n_err = rng.poisson(loop.error_rate_per_step)
+                for _ in range(n_err):
+                    hard = rng.random() < loop.hard_error_fraction
+                    domain, ev = domain.inject(rng, 1, hard=hard)
+                    report.injected += len(ev)
                 if n_err:
-                    paths = sorted(leaf_index(state["params"]))
-                    for _ in range(n_err):
-                        p = paths[rng.integers(len(paths))]
-                        hard = rng.random() < loop.hard_error_fraction
-                        state["params"] = injector.sample_into(
-                            state["params"], p, n_errors=1, hard=hard)
-                        report.injected += 1
+                    state = sync(state, domain)
 
             # ---- 2. patrol scrub + recovery
-            if scrubber is not None:
-                params, rep = scrubber.maybe_scrub(step, state["params"])
+            if policy is not None:
+                domain, rep = domain.scrub(step)
                 if rep is not None:
-                    state = {**state, "params": params}
+                    state = sync(state, domain)
                     c, u = rep.totals()
                     report.scrub_corrected += c
                     report.scrub_detected += u
-                    if u and recovery is not None:
-                        state = {**state, "params": recovery.respond(
-                            state["params"], rep, scrubber)}
-                        report.recoveries += len(rep.needs_recovery())
-                        # repaired leaves: sticky cells retired with them
-                        for pth in rep.needs_recovery():
-                            if recovery.strike_counts.get(pth, 0) >= \
-                                    recovery.retire_after:
-                                injector.clear(pth)
+                    if u:
+                        needs = rep.needs_recovery()
+                        domain, events = domain.recover(
+                            rep, clean_copy=clean_copy,
+                            response=loop.response, strikes=strikes,
+                            retirement=retirement, needs=needs)
+                        report.recoveries += len(needs)
+                        report.events.extend(events)
+                        state = sync(state, domain)
 
             # ---- simulated node failure (each failure fires once)
             if step in loop.node_failure_steps and \
@@ -141,20 +155,18 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, loop: LoopConfig,
             loss = float(metrics["loss"])
             report.losses.append(loss)
 
-            # ---- 4. write-path ECC for updated params
-            if scrubber is not None:
-                scrubber.refresh(state["params"])
-                # sticky (hard) errors re-assert on the fresh state
-                state = {**state,
-                         "params": injector.reassert_hard(state["params"])}
+            # ---- 4. write-path ECC for the updated roots, then sticky
+            #         (hard) errors re-assert on the fresh state
+            domain = domain.refresh(_sub(state, roots)).reassert_hard()
+            state = sync(state, domain)
 
             # ---- 5. checkpoint (async)
             if step > 0 and step % loop.ckpt_interval == 0:
                 if pending_ckpt is not None:
                     pending_ckpt.join()
                 pending_ckpt = store.save_async(step, state)
-                if recovery is not None:
-                    recovery.clean_copy = store.clean_copy_fn(step=None)
+                if policy is not None:
+                    clean_copy = store.clean_copy_fn(step=None)
 
             # ---- 6. straggler detection
             dt = time.time() - t0
@@ -177,11 +189,17 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, loop: LoopConfig,
             template = init_train_state(jax.random.PRNGKey(loop.seed), cfg,
                                         tcfg)
             state = store.load(latest, template)
-            injector.clear()
-            if scrubber is not None:
-                scrubber.refresh(state["params"])
+            domain = domain.clear_hard().refresh(_sub(state, roots))
             step = latest
 
     if pending_ckpt is not None:
         pending_ckpt.join()
+    st = domain.stats()
+    report.domain_stats = {
+        "payload_bytes": st.payload_bytes,
+        "sidecar_bytes": st.sidecar_bytes,
+        "overhead": st.overhead,
+        "protected_leaves": st.n_protected,
+        "live_hard_errors": st.n_hard_errors,
+    }
     return report

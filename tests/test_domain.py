@@ -1,0 +1,206 @@
+"""MemoryDomain tests: multi-root protect/scrub/recover round-trips,
+tier-grouped batched scrub equivalence vs the legacy per-leaf path, and
+pytree registration under jax.jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.configs.base import TrainConfig
+from repro.core import (HRMPolicy, MemoryDomain, REGIONS, Response,
+                        RestartRequired, RetirementMap, Tier, build_sidecar,
+                        detect_recover, scrub, typical_server)
+from repro.core.domain import DomainSpec
+from repro.models import init_params
+from repro.runtime.steps import init_train_state
+
+MIXED = HRMPolicy("mixed", {
+    "params/embed": Tier.SECDED, "params/attn": Tier.DECTED,
+    "params/mlp": Tier.PARITY_R, "params/norm": Tier.MIRROR,
+    "opt/m": Tier.PARITY_R, "opt/v": Tier.SECDED}, default=Tier.NONE)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), get_tiny("llama3-8b"))
+
+
+@pytest.fixture(scope="module")
+def train_state():
+    return init_train_state(jax.random.PRNGKey(1), get_tiny("lm-100m"),
+                            TrainConfig(remat="none"))
+
+
+def _equal_trees(a, b) -> bool:
+    same = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y)), a, b)
+    return all(jax.tree.leaves(same))
+
+
+# ------------------------------------------------- multi-root round trips
+def test_multi_root_protect_scrub_roundtrip(train_state):
+    dom = MemoryDomain.protect(train_state, MIXED, roots=("params", "opt"))
+    regions = {s.region for s in dom.spec.leaves}
+    assert "opt/m" in regions and "opt/v" in regions
+    assert any(r.startswith("params/") for r in regions)
+
+    corrupted, events = dom.inject(np.random.default_rng(0), 5)
+    assert len(events) == 5
+    fixed, report = corrupted.scrub()
+    c, u = report.totals()
+    assert c + u >= 1
+    # every SECDED-rooted strike is corrected in place; parity strikes are
+    # detected for recovery — nothing silently lost
+    clean = {p: dom.leaf(p) for p in dom.paths()}
+    recovered, _ = fixed.recover(report, clean_copy=lambda p: clean[p])
+    assert _equal_trees(recovered.payload, dom.payload)
+
+
+def test_multi_root_recover_restart_and_retire(train_state):
+    dom = MemoryDomain.protect(train_state, MIXED, roots=("params", "opt"))
+    par_paths = [s.path for s in dom.spec.leaves
+                 if s.tier == Tier.PARITY_R]
+    bad, _ = dom.inject(np.random.default_rng(3), 2, paths=par_paths,
+                        hard=True)
+    _, report = bad.scrub()
+    assert report.needs_recovery()
+    with pytest.raises(RestartRequired):
+        bad.recover(report, clean_copy=lambda p: None,
+                    response=Response.RESTART)
+    # recurring strikes escalate to retirement and clear the sticky cells
+    clean = {p: dom.leaf(p) for p in dom.paths()}
+    strikes = {p: 2 for p in report.needs_recovery()}   # two prior strikes
+    retirement = RetirementMap()
+    recovered, events = bad.recover(
+        report, clean_copy=lambda p: clean[p], strikes=strikes,
+        retirement=retirement, retire_after=3)
+    assert any("retire" in e["action"] for e in events)
+    assert retirement.count() >= 1
+    assert not recovered.hard_errors          # sticky cells gone
+
+
+# --------------------------------- equivalence vs the legacy per-leaf path
+@pytest.mark.parametrize("policy_fn", [
+    typical_server, detect_recover,
+    lambda: HRMPolicy("mirror", {r: Tier.MIRROR for r in REGIONS},
+                      default=Tier.MIRROR),
+    lambda: HRMPolicy("dected", {r: Tier.DECTED for r in REGIONS},
+                      default=Tier.DECTED)])
+def test_batched_scrub_bit_identical_to_legacy(params, policy_fn):
+    policy = policy_fn()
+    dom = MemoryDomain.protect(params, policy)
+    legacy_sc = build_sidecar(params, policy)
+
+    corrupted, _ = dom.inject(np.random.default_rng(11), 4)
+    bad_state = corrupted.payload
+
+    legacy_state, _, legacy_rep = scrub(bad_state, legacy_sc, policy)
+    dom_fixed, dom_rep = corrupted.scrub()
+
+    assert _equal_trees(dom_fixed.payload, legacy_state)
+    assert dom_rep.totals() == legacy_rep.totals()
+    assert dom_rep.needs_recovery() == legacy_rep.needs_recovery()
+
+
+def test_batched_sidecar_rows_match_legacy_encoding(params):
+    """Concatenated tier buffers hold exactly the legacy per-leaf codes."""
+    policy = typical_server()
+    dom = MemoryDomain.protect(params, policy)
+    legacy_sc = build_sidecar(params, policy)
+    buf = dom.sidecar[Tier.SECDED.value]["ecc"]
+    for s in dom.spec.leaves:
+        if s.tier is Tier.SECDED:
+            rows = buf[s.row_start:s.row_start + s.rows]
+            assert (np.asarray(rows)
+                    == np.asarray(legacy_sc[s.path]["ecc"])).all()
+
+
+def test_subset_scrub_matches_full(params):
+    dom = MemoryDomain.protect(params, typical_server())
+    corrupted, events = dom.inject(np.random.default_rng(5), 3)
+    struck = sorted({e["path"] for e in events})
+    full, full_rep = corrupted.scrub()
+    sub, sub_rep = corrupted.scrub(paths=struck)
+    assert _equal_trees(sub.payload, full.payload)
+    for p in struck:
+        assert int(sub_rep.corrected[p]) == int(full_rep.corrected[p])
+
+
+# ------------------------------------------------------ pytree under jit
+def test_domain_is_jittable_pytree(params):
+    dom = MemoryDomain.protect(params, typical_server())
+
+    @jax.jit
+    def double_first(d):
+        leaves = jax.tree.leaves(d.payload)
+        return leaves[0] * 2
+
+    out = double_first(dom)
+    assert out.shape == jax.tree.leaves(params)[0].shape
+
+    @jax.jit
+    def passthrough(d):
+        return d
+
+    d2 = passthrough(dom)
+    assert isinstance(d2, MemoryDomain)
+    assert d2.spec == dom.spec
+    assert _equal_trees(d2.payload, dom.payload)
+
+
+def test_domain_spec_hash_and_eq(params):
+    a = MemoryDomain.protect(params, typical_server())
+    b = MemoryDomain.protect(params, typical_server())
+    assert isinstance(a.spec, DomainSpec)
+    assert a.spec == b.spec and hash(a.spec) == hash(b.spec)
+    c = MemoryDomain.protect(params, detect_recover())
+    assert a.spec != c.spec
+
+
+# ------------------------------------------------- write path + stickies
+def test_refresh_after_write_then_clean_scrub(params):
+    dom = MemoryDomain.protect(params, typical_server())
+    updated = jax.tree.map(lambda x: x + 1 if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, params)
+    dom2 = dom.refresh(updated)
+    _, rep = dom2.scrub()
+    assert rep.totals() == (0, 0)            # re-encoded: no false alarms
+    # stale sidecar (no refresh) must flag the legitimate write instead
+    _, stale = dom.adopt(updated).scrub()
+    assert sum(stale.totals()) > 0
+
+
+def test_hard_errors_reassert_until_cleared(params):
+    dom = MemoryDomain.protect(params, typical_server())
+    bad, events = dom.inject(np.random.default_rng(9), 1, hard=True)
+    path = events[0]["path"]
+    fixed, rep1 = bad.scrub()
+    assert rep1.totals()[0] >= 1
+    again = fixed.reassert_hard()
+    _, rep2 = again.scrub()
+    assert rep2.totals()[0] >= 1             # sticky cell bit again
+    cleared = again.clear_hard(path)
+    assert path not in cleared.hard_errors
+
+
+def test_scrub_schedule(params):
+    policy = typical_server()
+    object.__setattr__(policy, "scrub_interval", 10)
+    dom = MemoryDomain.protect(params, policy)
+    _, rep = dom.scrub(step=3)
+    assert rep is None
+    _, rep = dom.scrub(step=20)
+    assert rep is not None
+
+
+# ------------------------------------------------------------ stats
+def test_stats_and_region_profile(params):
+    dom = MemoryDomain.protect(params, typical_server())
+    st = dom.stats()
+    assert st.payload_bytes > 0
+    assert 0.10 <= st.overhead <= 0.30       # SEC-DED 12.5% + row padding
+    prof = dom.region_profile()
+    assert abs(sum(prof.fractions.values()) - 1.0) < 1e-9
+    unprotected = MemoryDomain.protect(params, HRMPolicy("none", {}))
+    assert unprotected.stats().sidecar_bytes == 0
+    assert unprotected.sidecar == {}

@@ -1,0 +1,51 @@
+"""Graph-mining workload: PageRank + BFS on a power-law graph under an HRM
+policy, with errors injected into topology vs iterate regions — the
+paper's third case-study application.
+
+  PYTHONPATH=src python examples/graph_pagerank.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MemoryDomain, detect_recover_l
+from repro.graph import (bfs, bfs_reference, graph_state, pagerank,
+                         powerlaw_graph, top_k)
+
+g = powerlaw_graph(512, avg_degree=8, seed=0)
+print(f"graph: n={g.n} edges={g.n_edges} max_in_degree={g.max_in_degree}")
+
+# 1. the graph state is a MemoryDomain like any other workload: CSR
+#    topology on SEC-DED (crash-vulnerable pointers), rank on Par+R
+#    (numeric iterate self-heals), frontier on Par+R
+state = graph_state(g, with_bfs=True, source=0)
+domain = MemoryDomain.protect({"graph": state}, detect_recover_l())
+stats = domain.stats()
+print("tiers:", {r: t for r, t in sorted(stats.region_tiers.items())
+                 if r.startswith("graph/")})
+print(f"sidecar overhead: {stats.overhead:.2%}")
+
+# 2. golden run: Pallas segment-sum SpMV, bit-identical to its jnp oracle
+_, rank, delta = pagerank(state, g.n, iters=25, backend="pallas")
+golden = top_k(rank, g.n, 8)
+print("top-8:", golden.tolist(), f"residual={float(delta):.2e}")
+_, dist = bfs(state, backend="pallas")
+assert bool(jnp.array_equal(dist[0, :g.n], bfs_reference(g, 0)))
+print("BFS levels match the CSR reference")
+
+# 3. a soft error in the rank iterate self-heals under convergence...
+corrupted, ev = domain.inject(np.random.default_rng(3), 1,
+                              paths=["graph/rank/rank"])
+_, rank2, _ = pagerank(corrupted.payload["graph"], g.n, iters=25)
+healed = bool(jnp.array_equal(top_k(rank2, g.n, 8), golden)) \
+    if bool(jnp.isfinite(rank2).all()) else False
+print(f"rank strike at {ev[0]['path']}: top-8 preserved={healed}")
+
+# 4. ...while the scrub catches topology strikes before they rewire edges
+corrupted2, ev2 = domain.inject(np.random.default_rng(4), 1,
+                                paths=["graph/topology/src"])
+fixed, report = corrupted2.scrub()
+print(f"topology strike at {ev2[0]['path']}: scrub corrected="
+      f"{report.totals()[0]}")
+_, rank3, _ = pagerank(fixed.payload["graph"], g.n, iters=25)
+assert bool(jnp.array_equal(top_k(rank3, g.n, 8), golden))
+print("GRAPH_PAGERANK OK")

@@ -15,6 +15,11 @@ models (``costmodel``/``availability``), and the beyond-paper policy
 auto-tuner (``autopolicy``). The legacy per-leaf path (``build_sidecar`` /
 ``scrub`` / ``Scrubber``) is kept as a deprecated shim and as the reference
 implementation the batched path is verified bit-identical against.
+
+Workloads built on this core: the LM train/serve loops
+(``repro.runtime``), the kv-store serving example, and the graph-mining
+package (``repro.graph``); ``repro.launch.explore`` sweeps all of them
+through the Fig.5 design points. Architecture map: docs/DESIGN.md.
 """
 from repro.core.autopolicy import (  # noqa: F401
     AutoPolicyResult, tune_policy, tune_policy_for_domain,

@@ -12,12 +12,9 @@ Event flow for each incident memory error, by tier of the region it strikes:
             CRASH on the homogeneous typical server (no software layer)
   MIRROR/DECTED  corrected; negligible escape at these rates
 
-Calibration (documented in DESIGN.md §8): with the WebSearch vulnerability
-profile below and ERRORS_PER_SERVER_MONTH = 540 (an error-heavy server, as
-in the paper's motivation), the five design points land on the published
-numbers: Consumer PC ~99.0% availability; D&R: 2.9% server saving, <=3
-crashes/month, ~9-10 incorrect per million queries, >=99.90% availability;
-D&R/L: 4.7% saving, <=4 crashes, <=12 incorrect/M.
+Every constant below is calibrated; docs/DESIGN.md §8.2 records each
+value's provenance and the published Fig.5 numbers they reproduce
+(pinned in tests/test_explore.py).
 """
 from __future__ import annotations
 

@@ -2,11 +2,15 @@
 classify per the Fig. 1 taxonomy -> repeat.
 
 ``run_campaign`` is application-agnostic: it takes an ``eval_fn`` mapping a
-state pytree to output token ids (any int array — the "query response"), a
+state pytree to output token ids (any *non-negative* int array — the
+"query response"; negative entries are reserved as the crash marker), a
 state, and a region filter, and returns per-region ``OutcomeStats``.
 
 Classification (design goals of §2.1: controlled, efficient, adaptable):
   CRASH            eval raised, or produced non-finite / out-of-range output
+                   (negative token ids are the out-of-range crash marker:
+                   ``lm_eval_fn`` / the graph eval_fns emit -1 when the
+                   forward pass goes non-finite)
   INCORRECT        any output token differs from the golden response
   MASKED_OVERWRITE output identical AND the program overwrote the corrupted
                    value (final leaf == clean leaf) — possible for mutable
@@ -134,7 +138,9 @@ def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
                 out, final_state = None, unwrap(corrupted.payload)
                 try:
                     out, final_state = eval_fn(unwrap(corrupted.payload))
-                    crashed = not _finite(jnp.asarray(out).astype(jnp.float32))
+                    out_arr = jnp.asarray(out)
+                    crashed = (not _finite(out_arr.astype(jnp.float32))
+                               or bool(jnp.any(out_arr < 0)))
                 except (FloatingPointError, ZeroDivisionError, ValueError,
                         RuntimeError):
                     crashed = True
@@ -167,7 +173,7 @@ def lm_eval_fn(cfg, batch, forward):
         toks = jnp.argmax(logits, axis=-1)
         flag = jnp.isfinite(logits.astype(jnp.float32)).all().astype(
             jnp.int32)
-        # non-finite forward = crash marker (token -1 never matches golden)
+        # non-finite forward -> -1: the out-of-range crash marker
         toks = jnp.where(flag > 0, toks, -1)
         return toks, params
     return eval_fn

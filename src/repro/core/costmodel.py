@@ -5,19 +5,14 @@ Two parameter sets feed the same model:
 * ``WEBSEARCH`` — paper-calibrated constants that reproduce the published
   Fig. 5 numbers: Detect&Recover saves 9.7% memory / 2.9% server cost,
   Detect&Recover/L saves 15.5% / 4.7%, both at >= 99.90% availability.
-  Constants and their provenance:
-    - ECC (SEC-DED) capacity premium: 12.5%              [Table 1]
-    - parity capacity premium: 1/64 = 1.5625%            [Table 1]
-    - memory share of server capital cost: 30%           [solves 2.9/9.7
-      and 4.7/15.5 simultaneously; consistent with Kozyrakis+10]
-    - testing-cost discount for less-tested DRAM: 13.4%  [calibrated so
-      D&R/L lands on 15.5%; consistent with the 10-15% range of [2,33]]
-    - WebSearch region byte fractions: private 0.75, heap 0.23,
-      stack 0.005, other 0.015 (the index cache dominates memory)
+  Each constant's value and provenance is documented in docs/DESIGN.md
+  §8.1.
 
 * measured mode — region byte fractions computed from a *real* state pytree
-  of one of our architectures (``region_fractions``), so the same Fig.5
-  machinery prices HRM policies for the ML workloads.
+  of one of our workloads (``region_fractions`` for params trees,
+  ``MemoryDomain.region_profile`` for live domains), so the same Fig.5
+  machinery prices HRM policies for the ML and graph workloads — swept
+  across all of them by ``repro.launch.explore``.
 """
 from __future__ import annotations
 

@@ -54,7 +54,7 @@ from repro.kernels.secded import secded_encode_words, secded_scrub_words
 
 # top-level payload keys recognized as roots with their classifier kind
 _ROOT_KIND = {"params": "params", "opt": "opt", "kv_cache": "cache",
-              "cache": "cache"}
+              "cache": "cache", "graph": "graph"}
 
 
 class LeafSpec(NamedTuple):

@@ -6,7 +6,8 @@ Meza+15, Sridharan+12): errors arrive per GB-month; a fraction are hard
 (recurring at the same physical location until retired/repaired); hard
 errors are more likely to be multi-bit. ``less_tested`` scales the raw
 incidence by ``LESS_TESTED_FACTOR`` (the device class the paper's /L design
-points buy at a testing-cost discount).
+points buy at a testing-cost discount). Constant values and provenance:
+docs/DESIGN.md §8.3.
 """
 from __future__ import annotations
 

@@ -10,7 +10,8 @@ re-applying the flip after every step/scrub.
     ``Injector`` re-indexes the state pytree on every strike. New code
     should use ``core.domain.MemoryDomain.inject`` — the domain owns the
     hard-error map, samples byte-weighted over its cached leaf table, and
-    re-asserts sticky cells via ``domain.reassert_hard()``.
+    re-asserts sticky cells via ``domain.reassert_hard()``
+    (docs/DESIGN.md §5-6).
 """
 from __future__ import annotations
 

@@ -27,7 +27,7 @@ from repro.core.tiers import Tier
 
 REGIONS = ("params/embed", "params/attn", "params/mlp", "params/experts",
            "params/ssm", "params/norm", "opt/m", "opt/v", "kv_cache",
-           "activations")
+           "activations", "graph/topology", "graph/rank", "graph/frontier")
 
 _SSM_KEYS = ("mamba", "mlstm", "slstm", "conv_w", "conv_b", "a_log",
              "dt_bias", "d_skip")
@@ -36,6 +36,8 @@ _ATTN_KEYS = ("attn", "wq", "wk", "wv", "wo", "bq", "bk", "bv")
 _EXPERT_KEYS = ("moe", "experts", "router")
 _CACHE_KEYS = ("k", "v", "attn_k", "attn_v", "mamba_conv", "mamba_ssm",
                "m_conv", "m_c", "s_c", "s_n", "s_h", "s_m")
+_GRAPH_TOPO_KEYS = ("topology", "indptr", "indices", "src", "dst", "outdeg")
+_GRAPH_FRONTIER_KEYS = ("frontier", "visited", "dist")
 
 
 def _path_keys(path) -> Tuple[str, ...]:
@@ -57,6 +59,13 @@ def classify_path(path, root: str = "params") -> str:
         return "opt/m" if keys and keys[0] in ("m", "mu") else "opt/v"
     if root == "cache":
         return "kv_cache"
+    if root == "graph":
+        ks = set(keys)
+        if ks & set(_GRAPH_TOPO_KEYS):
+            return "graph/topology"
+        if ks & set(_GRAPH_FRONTIER_KEYS):
+            return "graph/frontier"
+        return "graph/rank"
     ks = set(keys)
     if ks & set(_EXPERT_KEYS):
         return "params/experts"
@@ -110,7 +119,9 @@ def detect_recover() -> HRMPolicy:
         {"params/embed": Tier.PARITY_R, "params/attn": Tier.PARITY_R,
          "params/mlp": Tier.PARITY_R, "params/experts": Tier.PARITY_R,
          "params/ssm": Tier.PARITY_R, "params/norm": Tier.PARITY_R,
-         "opt/m": Tier.PARITY_R, "opt/v": Tier.PARITY_R},
+         "opt/m": Tier.PARITY_R, "opt/v": Tier.PARITY_R,
+         "graph/topology": Tier.PARITY_R, "graph/rank": Tier.PARITY_R,
+         "graph/frontier": Tier.PARITY_R},
         default=Tier.NONE)
 
 
@@ -129,7 +140,12 @@ def detect_recover_l() -> HRMPolicy:
         {"params/embed": Tier.SECDED, "params/attn": Tier.SECDED,
          "params/norm": Tier.SECDED, "params/ssm": Tier.SECDED,
          "params/mlp": Tier.PARITY_R, "params/experts": Tier.PARITY_R,
-         "opt/m": Tier.PARITY_R, "opt/v": Tier.PARITY_R},
+         "opt/m": Tier.PARITY_R, "opt/v": Tier.PARITY_R,
+         # graph workload: the pointer-heavy topology is crash-vulnerable
+         # (Fig.4 analogue) -> SEC-DED; the numeric iterate self-heals
+         # under convergence -> Par+R
+         "graph/topology": Tier.SECDED, "graph/rank": Tier.PARITY_R,
+         "graph/frontier": Tier.PARITY_R},
         default=Tier.NONE,
         error_model=ErrorModel(less_tested=True))
 

@@ -4,8 +4,8 @@
     ``Scrubber`` drives the legacy per-leaf scrub over a single root. Use
     ``core.domain.MemoryDomain`` instead: ``domain.scrub(step)`` covers the
     schedule, ``domain.refresh(state)`` the write path, with tier-batched
-    kernels and a single re-flatten. ``Scrubber.create`` remains as a thin
-    shim so existing callers keep working.
+    kernels and a single re-flatten (docs/DESIGN.md §6). ``Scrubber.create``
+    remains as a thin shim so existing callers keep working.
 
 The paper's hardware ECC checks every access; a framework-level sidecar
 can't intercept loads, so protection is realized as a *scrub pass* run every

@@ -5,7 +5,7 @@
     reference implementation the batched ``core.domain.MemoryDomain`` is
     tested bit-identical against. New code should use
     ``MemoryDomain.protect(...)`` — one object, all roots, one Pallas
-    dispatch per tier instead of per leaf.
+    dispatch per tier instead of per leaf (docs/DESIGN.md §6).
 
 ``build_sidecar(state, policy, root)`` walks a state pytree, classifies each
 leaf into an HRM region, and materializes that region's tier:

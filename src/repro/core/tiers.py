@@ -1,11 +1,12 @@
 """Reliability tiers — the hardware dimension of the HRM design space.
 
-Mirrors Table 1 of the paper. Each tier's capacity overhead is realized *for
-real* by the software sidecar implementation (``core/sidecar.py``): SEC-DED
-stores 1 ECC byte per 64-bit word (12.5%), parity packs 1 bit per word
-(1.6%), MIRROR keeps a full second copy (100% + its own parity), matching
-the paper's numbers, so the cost model's capacity column is measured, not
-assumed.
+Mirrors Table 1 of the paper. Each tier's capacity overhead is realized
+*for real* by the tier-batched sidecar buffers of
+``core.domain.MemoryDomain`` (and the legacy per-leaf ``core/sidecar.py``
+shims): SEC-DED stores 1 ECC byte per 64-bit word (12.5%), parity packs
+1 bit per word (1.6%), MIRROR keeps a full second copy (100% + its own
+parity), matching the paper's numbers, so the cost model's capacity column
+is measured, not assumed. See docs/DESIGN.md §2.
 """
 from __future__ import annotations
 

@@ -1,0 +1,16 @@
+"""Graph-mining workload (the paper's third case-study application):
+synthetic power-law graphs in CSR layout, PageRank and BFS driven by the
+Pallas segment-sum kernels, all protectable as a ``MemoryDomain`` with
+per-region tiers (``graph/topology`` / ``graph/rank`` /
+``graph/frontier``). See ``docs/DESIGN.md`` for where this sits in the
+architecture and ``repro.launch.explore`` for the cross-workload sweep.
+"""
+from repro.graph.bfs import (  # noqa: F401
+    bfs, bfs_eval_fn, bfs_reference, bfs_step,
+)
+from repro.graph.generate import (  # noqa: F401
+    CSRGraph, graph_state, n_padded, powerlaw_graph,
+)
+from repro.graph.pagerank import (  # noqa: F401
+    BACKENDS, pagerank, pagerank_eval_fn, pagerank_step, top_k,
+)

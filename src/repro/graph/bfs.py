@@ -1,0 +1,90 @@
+"""BFS over the tiled-CSR payload: the push SpMV propagates frontier mass
+along edges and the Pallas frontier kernel (``repro.kernels.segsum``)
+thresholds it, masks visited nodes, and stamps levels into ``dist``.
+
+Unlike PageRank's numeric iterate, BFS state is *control* state: a flipped
+``visited`` bit or a rewired ``dst`` entry changes which vertices are ever
+reached — distances don't self-heal. The Fig.2 campaign over
+``bfs_eval_fn`` measures exactly that asymmetry between ``graph/frontier``
+and ``graph/rank`` tolerance.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.segsum import frontier_update, frontier_update_oracle
+from repro.graph.pagerank import _push
+
+
+def bfs_step(state: dict, level: int, *, backend: str = "pallas") -> dict:
+    """Advance the frontier one level; returns the state with the
+    ``frontier`` group replaced."""
+    topo = state["topology"]
+    fr = state["frontier"]
+    pushed = _push(topo["src"], topo["dst"],
+                   fr["frontier"].astype(jnp.float32), backend)
+    if backend == "pallas":
+        frontier, visited, dist = frontier_update(
+            pushed, fr["visited"], fr["dist"], level,
+            interpret=ops.INTERPRET)
+    else:
+        frontier, visited, dist = frontier_update_oracle(
+            pushed, fr["visited"], fr["dist"], level)
+    return {**state, "frontier": {"frontier": frontier,
+                                  "visited": visited, "dist": dist}}
+
+
+def bfs(state: dict, *, max_levels: int = 0, backend: str = "pallas"
+        ) -> Tuple[dict, jax.Array]:
+    """Run BFS to exhaustion (or ``max_levels``) from the state's current
+    frontier (seeded by ``graph_state(..., with_bfs=True, source=s)``).
+
+    Returns (final state, dist (1, n_pad) int32, -1 = unreached).
+    """
+    n_pad = state["frontier"]["dist"].shape[1]
+    levels = max_levels or n_pad
+    for level in range(1, levels + 1):
+        state = bfs_step(state, level, backend=backend)
+        if not bool(jnp.any(state["frontier"]["frontier"] > 0)):
+            break
+    return state, state["frontier"]["dist"]
+
+
+def bfs_reference(g, source: int) -> jax.Array:
+    """Plain-numpy CSR BFS oracle over a ``CSRGraph`` (in-edge CSR: we
+    traverse by scanning rows for frontier sources)."""
+    import numpy as np
+    n = g.n
+    indptr, indices = g.indptr, g.indices
+    dist = np.full(n, -1, np.int32)
+    dist[source] = 0
+    frontier = {source}
+    level = 0
+    while frontier:
+        level += 1
+        nxt = set()
+        for v in range(n):
+            if dist[v] >= 0:
+                continue
+            row = indices[indptr[v]:indptr[v + 1]]
+            if any(u in frontier for u in row.tolist()):
+                dist[v] = level
+                nxt.add(v)
+        frontier = nxt
+    return jnp.asarray(dist)
+
+
+def bfs_eval_fn(n: int, *, max_levels: int = 0, backend: str = "pallas"):
+    """Fig.2 ``eval_fn``: the query response is the distance vector of the
+    real nodes. Unreached nodes report ``n`` (not the internal -1):
+    ``run_campaign`` reads negative outputs as the crash marker."""
+    def eval_fn(payload):
+        state, dist = bfs(payload["graph"], max_levels=max_levels,
+                          backend=backend)
+        d = dist[0, :n]
+        return jnp.where(d < 0, n, d), {**payload, "graph": state}
+    return eval_fn

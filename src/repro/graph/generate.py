@@ -1,0 +1,113 @@
+"""Synthetic power-law graphs in CSR layout — the graph-mining workload's
+input (the paper's third case-study application).
+
+``powerlaw_graph`` draws out-degrees from a truncated power law and wires
+destinations preferentially (popularity weights are themselves power-law
+over a random node permutation), so both degree tails are heavy — the
+web/social-graph shape that makes graph frameworks memory-bound. The CSR
+stores **in-edges**: row ``v`` holds the sources of edges into ``v``,
+which is exactly the order a pull/push SpMV consumes.
+
+``graph_state`` expands the CSR into the device payload the Pallas kernels
+(``repro.kernels.segsum``) read — tiled edge arrays plus node vectors —
+grouped into the HRM regions of ``repro.core.policy``:
+
+    graph/topology   src, dst (the tiled CSR expansion), outdeg — the
+                     pointer-heavy structure: corruption rewires edges
+    graph/rank       the PageRank iterate (self-heals under convergence)
+    graph/frontier   BFS frontier/visited/dist (transient per traversal)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segsum import EDGE_TILE, NODE_LANES, _round_up, pad_edges
+
+
+@dataclass(frozen=True)
+class CSRGraph:
+    """In-edge CSR: ``indices[indptr[v]:indptr[v+1]]`` = sources into v."""
+    n: int
+    indptr: np.ndarray        # (n+1,) int32
+    indices: np.ndarray       # (nnz,) int32, row-sorted
+    out_degree: np.ndarray    # (n,) int32
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def max_in_degree(self) -> int:
+        return int(np.diff(self.indptr).max()) if self.n else 0
+
+
+def powerlaw_graph(n: int, *, avg_degree: float = 8.0, alpha: float = 2.1,
+                   seed: int = 0) -> CSRGraph:
+    """Deterministic power-law digraph: out-degrees follow a truncated
+    ``k^{-alpha}`` law (configuration-model style), destinations are drawn
+    preferentially, self-loops and duplicate edges are removed."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    # out-degree targets: power-law weights over the permuted node ranks
+    w = (np.arange(n, dtype=np.float64) + 1.0) ** (-1.0 / (alpha - 1.0))
+    deg = np.maximum(1, np.round(avg_degree * w / w.mean())).astype(np.int64)
+    deg = np.minimum(deg, max(1, n // 2))[order]
+    # destination popularity: an independent permuted power law
+    pop = w[rng.permutation(n)]
+    p = pop / pop.sum()
+    srcs, dsts = [], []
+    for u in range(n):
+        d = rng.choice(n, size=int(deg[u]), p=p)       # with replacement;
+        d = np.unique(d[d != u])                       # dedupe + no loops
+        srcs.append(np.full(d.shape[0], u, np.int64))
+        dsts.append(d)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    order = np.lexsort((src, dst))                     # row-sorted (by dst)
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    indptr = np.cumsum(indptr)
+    out_degree = np.bincount(src, minlength=n)
+    return CSRGraph(n, indptr.astype(np.int32), src.astype(np.int32),
+                    out_degree.astype(np.int32))
+
+
+def graph_state(g: CSRGraph, *, with_bfs: bool = False, source: int = 0,
+                edge_tile: int = EDGE_TILE) -> dict:
+    """Device payload for the kernels, classifiable by ``MemoryDomain``
+    (wrap as ``{"graph": graph_state(g)}`` before ``protect``).
+
+    ``dst`` is the CSR row expansion of ``indptr`` and ``src`` its
+    ``indices`` column, tiled and sentinel-padded for the edge grid; the
+    sentinel is ``n_pad`` (matches no node).
+    """
+    n_pad = _round_up(max(g.n, 1), NODE_LANES)
+    dst = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.indptr))
+    src, dst = pad_edges(jnp.asarray(g.indices), jnp.asarray(dst), n_pad,
+                         edge_tile=edge_tile)
+    outdeg = jnp.zeros((1, n_pad), jnp.int32).at[0, :g.n].set(
+        jnp.asarray(g.out_degree))
+    real = jnp.arange(n_pad) < g.n
+    rank = jnp.where(real, 1.0 / g.n, 0.0).reshape(1, n_pad)
+    state = {
+        "topology": {"src": src, "dst": dst, "outdeg": outdeg},
+        "rank": {"rank": rank.astype(jnp.float32)},
+    }
+    if with_bfs:
+        onehot = (jnp.arange(n_pad) == source).astype(jnp.int32)
+        state["frontier"] = {
+            "frontier": onehot.reshape(1, n_pad),
+            "visited": onehot.reshape(1, n_pad),
+            "dist": jnp.where(onehot > 0, 0, -1).reshape(1, n_pad)
+                       .astype(jnp.int32),
+        }
+    return state
+
+
+def n_padded(state: dict) -> int:
+    """Padded node-vector length of a ``graph_state`` payload."""
+    return int(state["rank"]["rank"].shape[1])

@@ -1,0 +1,194 @@
+"""Pallas TPU kernels for tiled-CSR segment-sum SpMV and BFS frontier
+updates — the compute core of the graph-mining workload (``repro.graph``).
+
+Data layout: a CSR graph is expanded into edge arrays ``src``/``dst`` of
+shape (E,) int32 (``dst`` is the CSR row expansion: edges arrive sorted by
+destination), padded to a multiple of the edge tile with the sentinel id
+``n_pad`` (matches no node, contributes nothing). Node vectors are (1, N)
+with N a multiple of 128 lanes.
+
+``edge_segment_push`` computes ``y[j] = sum_{e: dst[e]==j} x[src[e]]`` —
+one grid step per edge tile; within a tile both the gather (``x[src]``)
+and the scatter-add (segment sum by ``dst``) are realized as one-hot
+matmuls, the TPU segment-sum idiom: the (N, TE) one-hot masks feed the MXU
+and the accumulation across tiles rides the revisited output block. No
+dynamic indexing touches the kernel, so the same body runs under
+``interpret=True`` on CPU.
+
+``frontier_update`` is the elementwise BFS step (threshold pushed mass,
+mask visited, stamp the level into ``dist``), tiled over node blocks.
+
+``*_oracle`` functions replay the identical tile/accumulation order in
+plain jnp: the Pallas kernels are tested **bit-identical** against them
+(``tests/test_graph.py``), and both are allclose to the
+``jax.ops.segment_sum`` reference (different summation order).
+
+VMEM note: each grid step holds the full (1, N) node vector plus two
+(N, TE) one-hot masks, so the single-kernel form scales to N ~ tens of
+thousands of nodes; larger graphs would add a second grid dimension over
+node blocks (two-pass gather/scatter), which this workload does not need
+yet.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EDGE_TILE = 512          # edges per grid step; multiple of the 128-lane tile
+NODE_LANES = 128         # node vectors padded to a multiple of this
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def fit_edge_tile(e: int, max_tile: int = EDGE_TILE) -> int:
+    """Largest tile <= ``max_tile`` dividing the padded edge count ``e`` —
+    lets consumers recover a valid grid for arrays padded with any
+    ``edge_tile``."""
+    for t in range(min(max_tile, e), 0, -1):
+        if e % t == 0:
+            return t
+    return 1
+
+
+def pad_edges(src, dst, n_pad: int, *, edge_tile: int = EDGE_TILE):
+    """Pad (E,) edge arrays to a multiple of ``edge_tile`` with the
+    sentinel id ``n_pad`` (out of range: matches no node)."""
+    e = src.shape[0]
+    e_pad = max(edge_tile, _round_up(e, edge_tile))
+    pad = e_pad - e
+    if pad:
+        src = jnp.pad(src, (0, pad), constant_values=n_pad)
+        dst = jnp.pad(dst, (0, pad), constant_values=n_pad)
+    return src.astype(jnp.int32), dst.astype(jnp.int32)
+
+
+def _push_block(src, dst, x):
+    """One edge tile: gather-by-src then segment-sum-by-dst, both as
+    one-hot matmuls. src/dst: (1, TE); x: (1, N). Returns (1, N)."""
+    n = x.shape[1]
+    te = src.shape[1]
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (n, te), 0)
+    gather = (node_ids == src).astype(x.dtype)           # (N, TE)
+    contrib = jnp.dot(x, gather)                         # (1, TE)
+    edge_ids = jax.lax.broadcasted_iota(jnp.int32, (te, n), 1)
+    scatter = (edge_ids == dst.reshape(te, 1)).astype(x.dtype)   # (TE, N)
+    return jnp.dot(contrib, scatter)                     # (1, N)
+
+
+def _push_kernel(src_ref, dst_ref, x_ref, y_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+    y_ref[...] += _push_block(src_ref[...], dst_ref[...], x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("edge_tile", "interpret"))
+def edge_segment_push(src, dst, x, *, edge_tile: int = EDGE_TILE,
+                      interpret: bool = True):
+    """src, dst: (E,) int32, E % edge_tile == 0, sentinel-padded; x: (1, N)
+    float32, N % 128 == 0. Returns y (1, N) with
+    ``y[j] = sum_{e: dst[e]==j} x[src[e]]``."""
+    e = src.shape[0]
+    _, n = x.shape
+    assert e % edge_tile == 0, (e, edge_tile)
+    assert n % NODE_LANES == 0, n
+    g = e // edge_tile
+    src2 = src.reshape(g, edge_tile)
+    dst2 = dst.reshape(g, edge_tile)
+    edge_spec = pl.BlockSpec((1, edge_tile), lambda i: (i, 0))
+    node_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    return pl.pallas_call(
+        _push_kernel,
+        grid=(g,),
+        in_specs=[edge_spec, edge_spec, node_spec],
+        out_specs=node_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=interpret,
+    )(src2, dst2, x)
+
+
+def edge_segment_push_oracle(src, dst, x, *, edge_tile: int = EDGE_TILE):
+    """jnp oracle replaying the kernel's exact tile math and accumulation
+    order — the bit-equivalence reference for ``edge_segment_push``.
+
+    Deliberately not jit'd: op-by-op dispatch mirrors the interpreter's
+    execution exactly, whereas XLA fusion of the accumulate chain perturbs
+    the matmul epilogue by ~1 ulp."""
+    e = src.shape[0]
+    g = e // edge_tile
+    y = jnp.zeros_like(x)
+    for i in range(g):
+        sl = slice(i * edge_tile, (i + 1) * edge_tile)
+        y = y + _push_block(src[sl].reshape(1, -1),
+                            dst[sl].reshape(1, -1), x)
+    return y
+
+
+def edge_segment_push_ref(src, dst, x):
+    """Independent reference via ``jax.ops.segment_sum`` (different
+    summation order: allclose, not bit-equal, to the kernel). Out-of-range
+    ids — the sentinel padding, or corrupted (possibly negative) indices —
+    drop their edge, matching the kernel's one-hot semantics."""
+    n = x.shape[1]
+    src_ok = (src >= 0) & (src < n)
+    contrib = jnp.where(src_ok, x[0, jnp.clip(src, 0, n - 1)], 0.0)
+    seg = jnp.where((dst >= 0) & (dst < n), dst, n)  # invalid -> segment n
+    return jax.ops.segment_sum(contrib, seg,
+                               num_segments=n + 1)[:n].reshape(1, n)
+
+
+# ------------------------------------------------------- BFS frontier step
+def _frontier_kernel(pushed_ref, visited_ref, dist_ref, level_ref,
+                     frontier_out, visited_out, dist_out):
+    pushed = pushed_ref[...]
+    visited = visited_ref[...]
+    dist = dist_ref[...]
+    level = level_ref[...]                       # (1, 1), broadcasts
+    newly = ((pushed > 0) & (visited == 0)).astype(jnp.int32)
+    frontier_out[...] = newly
+    visited_out[...] = visited | newly
+    dist_out[...] = jnp.where(newly > 0, level.astype(jnp.int32), dist)
+
+
+@functools.partial(jax.jit, static_argnames=("block_nodes", "interpret"))
+def frontier_update(pushed, visited, dist, level, *,
+                    block_nodes: int = 1024, interpret: bool = True):
+    """BFS step: nodes reached by ``pushed`` frontier mass and not yet
+    visited become the next frontier, stamped with ``level`` in ``dist``.
+
+    pushed (1, N) f32; visited/dist (1, N) int32; level int32 scalar.
+    Returns (frontier, visited, dist), all (1, N) int32.
+    """
+    _, n = pushed.shape
+    assert n % NODE_LANES == 0, n
+    # largest lane-multiple block <= block_nodes that divides n (NODE_LANES
+    # always does, so this terminates)
+    bn = max(NODE_LANES, min(block_nodes, n) // NODE_LANES * NODE_LANES)
+    while n % bn:
+        bn -= NODE_LANES
+    node_spec = pl.BlockSpec((1, bn), lambda i: (0, i))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    outs = tuple(jax.ShapeDtypeStruct((1, n), jnp.int32) for _ in range(3))
+    return pl.pallas_call(
+        _frontier_kernel,
+        grid=(n // bn,),
+        in_specs=[node_spec] * 3 + [scalar_spec],
+        out_specs=(node_spec,) * 3,
+        out_shape=outs,
+        interpret=interpret,
+    )(pushed, visited.astype(jnp.int32), dist.astype(jnp.int32),
+      jnp.asarray(level, jnp.int32).reshape(1, 1))
+
+
+def frontier_update_oracle(pushed, visited, dist, level):
+    """jnp oracle for ``frontier_update`` (bit-equivalence reference)."""
+    visited = visited.astype(jnp.int32)
+    dist = dist.astype(jnp.int32)
+    newly = ((pushed > 0) & (visited == 0)).astype(jnp.int32)
+    return (newly, visited | newly,
+            jnp.where(newly > 0, jnp.int32(level), dist))

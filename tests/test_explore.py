@@ -1,0 +1,102 @@
+"""Cross-workload explorer: the pinned Fig.5 headline numbers on the
+websearch column, the graph-workload sweep, and the CLI."""
+import pytest
+
+from repro.core import paper_design_availability, paper_design_costs
+from repro.launch.explore import (DESIGNS, ExploreRow, build_workload,
+                                  explore_workload, format_table, main,
+                                  websearch_workload)
+
+
+def _by_design(rows):
+    return {r.design: r for r in rows}
+
+
+# -------------------------------------------------- paper-number pins
+def test_fig5_websearch_paper_pins():
+    """The published Fig.5 numbers: D&R 9.7% mem / 2.9% server, D&R/L
+    15.5% / 4.7%, both >= 99.90% availability."""
+    costs = paper_design_costs()
+    avail = paper_design_availability()
+    assert abs(costs["detect_recover"].memory_saving - 0.097) < 0.005
+    assert abs(costs["detect_recover"].server_saving - 0.029) < 0.005
+    assert abs(costs["detect_recover_l"].memory_saving - 0.155) < 0.005
+    assert abs(costs["detect_recover_l"].server_saving - 0.047) < 0.005
+    assert avail["detect_recover"].availability >= 0.9990
+    assert avail["detect_recover_l"].availability >= 0.9990
+    assert avail["detect_recover"].crashes_per_month <= 3.0
+    assert avail["detect_recover_l"].crashes_per_month <= 4.0
+    assert avail["detect_recover"].incorrect_per_million <= 10.0
+    assert avail["detect_recover_l"].incorrect_per_million <= 12.0
+    assert avail["consumer_pc"].availability < 0.995   # the cautionary tale
+
+
+def test_explorer_websearch_column_reproduces_paper():
+    """The explorer's websearch table IS the paper's Fig.5."""
+    rows = _by_design(explore_workload(websearch_workload(), list(DESIGNS)))
+    drl = rows["detect_recover_l"]
+    assert abs(drl.memory_saving - 0.155) < 0.005
+    assert abs(drl.server_saving - 0.047) < 0.005      # the 4.7% point
+    assert drl.availability >= 0.9990
+    dr = rows["detect_recover"]
+    assert abs(dr.server_saving - 0.029) < 0.005
+    assert dr.availability >= 0.9990
+    # the auto-tuner dominates the hand-designed /L point
+    auto = rows["autopolicy"]
+    assert auto.memory_saving > drl.memory_saving
+    assert auto.availability >= 0.9990
+    assert auto.incorrect_per_million <= 12.0
+    # baseline sanity: typical server saves nothing by definition
+    assert rows["typical_server"].memory_saving == pytest.approx(0.0)
+
+
+# ------------------------------------------------------ graph workload
+@pytest.fixture(scope="module")
+def graph_rows():
+    w = build_workload("graph", n_nodes=128)
+    return w, explore_workload(w, list(DESIGNS))
+
+
+def test_graph_sweep_covers_all_designs(graph_rows):
+    w, rows = graph_rows
+    assert [r.design for r in rows] == list(DESIGNS)
+    assert all(isinstance(r, ExploreRow) and r.workload == "graph"
+               for r in rows)
+    table = format_table(w, rows)
+    assert "graph" in table and "autopolicy" in table
+
+
+def test_graph_hrm_points_meet_availability_band(graph_rows):
+    _, rows = graph_rows
+    by = _by_design(rows)
+    for name in ("detect_recover", "detect_recover_l", "autopolicy"):
+        assert by[name].availability >= 0.9990, name
+        assert by[name].incorrect_per_million <= 12.0, name
+    # HRM delivers double-digit memory savings on the graph workload too
+    assert by["detect_recover_l"].memory_saving > 0.10
+    # unprotected memory is not an option for pointer-heavy graphs
+    assert by["consumer_pc"].availability < by["detect_recover"].availability
+
+
+def test_graph_profile_is_measured(graph_rows):
+    w, _ = graph_rows
+    frac = w.profile.fractions
+    assert set(frac) == {"graph/topology", "graph/rank", "graph/frontier"}
+    assert abs(sum(frac.values()) - 1.0) < 1e-9
+    assert frac["graph/topology"] > 0.5    # edge arrays dominate bytes
+
+
+# ----------------------------------------------------------------- CLI
+def test_cli_websearch(capsys):
+    assert main(["--workload", "websearch", "--design", "all"]) == 0
+    out = capsys.readouterr().out
+    assert "websearch" in out
+    assert "detect_recover_l" in out
+    assert "autopolicy" in out
+
+
+def test_cli_graph_dry_run(capsys):
+    assert main(["--workload", "graph", "--design", "detect_recover_l",
+                 "--dry-run"]) == 0
+    out = capsys.readouterr().out
+    assert "EXPLORE DRY-RUN OK" in out

@@ -10,7 +10,8 @@ from __future__ import annotations
 import sys
 import traceback
 
-BENCHES = ("table1", "fig3", "fig4", "fig5", "scrub", "roofline")
+BENCHES = ("table1", "fig3", "fig4", "fig5", "scrub", "roofline",
+           "serve_slo")
 
 
 def _load(name: str):
@@ -26,6 +27,8 @@ def _load(name: str):
         from benchmarks import scrub_overhead as m
     elif name == "roofline":
         from benchmarks import roofline as m
+    elif name == "serve_slo":
+        from benchmarks import serve_slo as m
     else:
         raise KeyError(name)
     return m

@@ -1,0 +1,66 @@
+"""Online-serving SLO benchmark: golden + storm pass on one trace.
+
+Runs the continuous-batching engine on a tiny model twice over the same
+request trace — a zero-injection golden pass and a pass under one
+compressed server-month error storm (params detect_recover, KV pages on
+Par+R) — and reports throughput, TTFT/TPOT p50/p99, the measured
+incorrect-response rate, and measured availability against the paper's
+99.90% single-server bar. Writes ``BENCH_serve_slo.json``.
+
+  PYTHONPATH=src python -m benchmarks.run serve_slo
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row
+
+OUT_JSON = "BENCH_serve_slo.json"
+N_REQUESTS = 40
+STORM_ERRORS = 540          # one server-month budget (availability.py)
+
+
+def run() -> List[Row]:
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.core import DESIGN_POINTS, Tier
+    from repro.models import init_params
+    from repro.serve import (OnlineEngine, TrafficConfig, generate_trace,
+                             incorrect_rate)
+
+    cfg = get_tiny("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tc = TrafficConfig(n_requests=N_REQUESTS, rate=16.0, process="bursty",
+                       seed=7)
+    trace = generate_trace(tc, cfg.vocab_size)
+
+    def make_engine():
+        return OnlineEngine(
+            cfg, params, slots=4, page_size=8,
+            max_prompt_len=tc.max_prompt_len, max_new_cap=tc.max_new_cap,
+            policy=DESIGN_POINTS["detect_recover"](),
+            kv_tier=Tier.PARITY_R, scrub_every=4, seed=7)
+
+    t0 = time.perf_counter()
+    _, golden = make_engine().run(trace, storm_errors=0)
+    report, observed = make_engine().run(trace, storm_errors=STORM_ERRORS)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    report.incorrect_rate = incorrect_rate(golden, observed)
+    report.write_json(OUT_JSON)
+
+    per_req = wall_us / max(report.completed, 1)
+    return [
+        Row("serve_slo/throughput", per_req,
+            f"{report.throughput_rps:.2f}rps_{report.tokens_per_s:.0f}tps"),
+        Row("serve_slo/ttft", report.ttft_p50_s * 1e6,
+            f"p99={report.ttft_p99_s * 1e3:.1f}ms"),
+        Row("serve_slo/tpot", report.tpot_p50_s * 1e6,
+            f"p99={report.tpot_p99_s * 1e3:.2f}ms"),
+        Row("serve_slo/availability", 0.0,
+            f"{report.availability:.6f}_"
+            f"{'PASS' if report.availability >= 0.9990 else 'FAIL'}@99.90%"),
+        Row("serve_slo/incorrect_rate", 0.0,
+            f"{report.incorrect_rate:.4f}"),
+    ]

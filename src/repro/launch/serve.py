@@ -2,6 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --tiny \
       --batch 4 --prompt-len 32 --new-tokens 16 --policy detect_recover
+
+Pass ``--no-tiny`` for the full-size architecture.
 """
 from __future__ import annotations
 
@@ -16,16 +18,21 @@ from repro.models import init_params
 from repro.runtime.serve_loop import serve_batch
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--tiny", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--policy", choices=sorted(DESIGN_POINTS), default=None)
     ap.add_argument("--error-rate", type=float, default=0.0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)

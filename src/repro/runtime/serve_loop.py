@@ -50,10 +50,16 @@ def serve_batch(cfg: ModelConfig, params, prompts: jax.Array,
         if src.shape != dst.shape else src.astype(dst.dtype),
         full, cache)
 
-    # leaf table + sidecars built once — nothing re-indexes in the token loop
-    domain = MemoryDomain.protect(
-        params, policy if policy is not None else HRMPolicy("unprotected", {}))
-    report.sidecar_overhead = domain.stats().overhead
+    # leaf table + sidecars built once — nothing re-indexes in the token
+    # loop. With no policy there is no domain at all (and no sidecar
+    # overhead to report); injection alone still needs the leaf table, so
+    # an unprotected (sidecar-free) domain is built only in that case.
+    domain = None
+    if policy is not None:
+        domain = MemoryDomain.protect(params, policy)
+        report.sidecar_overhead = domain.stats().overhead
+    elif error_rate_per_token > 0:
+        domain = MemoryDomain.protect(params, HRMPolicy("unprotected", {}))
     rng = np.random.default_rng(seed + 1)
 
     token = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
@@ -70,7 +76,9 @@ def serve_batch(cfg: ModelConfig, params, prompts: jax.Array,
             report.scrub_corrected += c
             report.scrub_detected += u
         out.append(token)
-        cache, token, pos = serve(domain.payload, cache, token, pos)
+        cache, token, pos = serve(
+            domain.payload if domain is not None else params, cache, token,
+            pos)
         report.tokens_emitted += B
     report.queries += B
     return jnp.stack(out, axis=1), report

@@ -1,0 +1,18 @@
+"""The online serving plane: router -> continuous-batching scheduler ->
+paged HRM-protected KV cache, driven against an SLO while an error storm
+fires live (docs/DESIGN.md §9).
+"""
+from repro.serve.engine import (  # noqa: F401
+    OnlineEngine, ServiceModel, kv_policy,
+)
+from repro.serve.metrics import (  # noqa: F401
+    SLOCounters, SLOReport, build_report, incorrect_rate,
+)
+from repro.serve.paged_kv import NULL_PAGE, PagedKVCache  # noqa: F401
+from repro.serve.router import RequestRouter  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    CompletedRequest, ContinuousBatchingScheduler, SlotState,
+)
+from repro.serve.traffic import (  # noqa: F401
+    Request, TrafficConfig, generate_trace,
+)

@@ -1,0 +1,469 @@
+"""The online serving engine: continuous batching over a paged,
+HRM-protected KV cache, driven by a timestamped request trace while an
+error storm fires live.
+
+Two memory domains, mirroring the paper's region split:
+
+  params    the model weights — long-lived, crash-vulnerable, protected
+            by any of the five design-point policies (patrol-scrubbed on
+            the policy cadence; Par+R detections reload from a clean copy
+            and charge ``RECOVERY_SECONDS`` of measured downtime).
+  kv_cache  the paged KV pools — the Fig. 4 largest, most error-tolerant
+            region, under a configurable cheap tier. Unlike params, the
+            pools are written every step, so ECC is emulated the way the
+            hardware does it: the sidecar is re-encoded after each step's
+            legitimate writes (write-path ECC) and *checked at the start
+            of the next step* (access-path ECC) — injected strikes always
+            land between a refresh and the next check, so they are
+            detected (parity) or corrected (SEC-DED), never laundered.
+
+The decode step is one jit program over every scheduler slot: gather each
+slot's pages into a contiguous view, one-hot-insert the new token's K/V
+(the same update the contiguous oracle uses), attend under the per-slot
+validity mask, and scatter the new K/V back to its page. The gathered
+view reproduces the contiguous cache bit-for-bit, so paged decode is
+bit-identical to ``runtime.serve_loop.serve_batch``
+(``tests/test_serve_plane.py`` pins this).
+
+Time: the engine advances a virtual clock by a calibrated service model
+(``--clock model``, deterministic — the CI/test path) or by measured wall
+time per step (``--clock wall``). An error storm compresses one
+server-month's error budget (default 540 incident errors) into the run;
+availability is computed from *measured* recovery/crash events against
+that month (docs/DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import HRMPolicy, MemoryDomain, Tier
+from repro.core.availability import MINUTES_PER_MONTH
+from repro.models import forward
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import dtype_of, rmsnorm
+from repro.models.transformer import _head
+from repro.serve.metrics import SLOCounters, SLOReport, build_report
+from repro.serve.paged_kv import PagedKVCache
+from repro.serve.router import RequestRouter
+from repro.serve.scheduler import ContinuousBatchingScheduler
+from repro.serve.traffic import Request
+
+
+# =====================================================================
+# service-time model (virtual clock)
+# =====================================================================
+@dataclass(frozen=True)
+class ServiceModel:
+    """Per-step virtual costs, roughly a small-LLM accelerator: a decode
+    step near 10 ms and prefill growing with prompt length."""
+    prefill_base: float = 4e-3
+    prefill_per_token: float = 5e-5
+    decode_base: float = 9e-3
+    decode_per_slot: float = 4e-4
+
+    def prefill_cost(self, n_tokens: int) -> float:
+        return self.prefill_base + n_tokens * self.prefill_per_token
+
+    def decode_cost(self, n_active: int) -> float:
+        return self.decode_base + n_active * self.decode_per_slot
+
+
+def kv_policy(tier: Tier) -> HRMPolicy:
+    """Policy for the KV domain: one region, one (cheap) tier."""
+    tiers = {} if tier is Tier.NONE else {"kv_cache": tier}
+    return HRMPolicy(f"kv_{tier.value}", tiers, default=Tier.NONE,
+                     scrub_interval=1)
+
+
+# =====================================================================
+# jitted programs (shared across engine instances via lru_cache)
+# =====================================================================
+def _make_paged_decode(cfg: ModelConfig, page_size: int):
+    """One fused decode step over every slot against the paged pools.
+
+    (params, pool_k, pool_v, table, tokens, pos)
+      -> (pool_k', pool_v', next_tokens, ok)
+
+    The attention math mirrors ``models.attention.attn_decode`` line for
+    line on the gathered contiguous view, so results are bit-identical to
+    the contiguous-cache path.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged decode supports dense/moe/vlm, "
+                         f"not {cfg.family!r}")
+    dh, H = cfg.head_dim, cfg.n_heads
+    cdt = dtype_of(cfg.compute_dtype)
+
+    def step(params, pool_k, pool_v, table, tokens, pos):
+        S, P = table.shape
+        smax = P * page_size
+        x = params["embed"][tokens][:, None, :].astype(cdt)    # (S,1,D)
+        positions = pos[:, None]                               # (S,1)
+        pid = jnp.take_along_axis(
+            table, (pos // page_size)[:, None], axis=1)[:, 0]  # (S,)
+        off = pos % page_size
+
+        def body(x, xs):
+            layer, pk, pv = xs
+            h = rmsnorm(x, layer["norm1"], cfg.norm_eps)
+            q, k_new, v_new = attn._project_qkv(
+                layer["attn"], h, cfg, positions)
+            # page gather -> contiguous (S, smax, K, dh) view
+            vk = pk[table].reshape(S, smax, *pk.shape[2:])
+            vv = pv[table].reshape(S, smax, *pv.shape[2:])
+            # one-hot insert of the new token (the contiguous oracle's
+            # dynamic_update_slice, batched over per-slot positions)
+            upd = (jnp.arange(smax)[None, :]
+                   == pos[:, None])[:, :, None, None]
+            vk = jnp.where(upd, k_new.astype(vk.dtype), vk)
+            vv = jnp.where(upd, v_new.astype(vv.dtype), vv)
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", q,
+                                vk.astype(q.dtype)).astype(jnp.float32)
+            scores = scores / math.sqrt(dh)
+            valid = (jnp.arange(smax)[None, :]
+                     <= pos[:, None])[:, None, None, None, :]
+            scores = jnp.where(valid, scores, -jnp.inf)
+            w = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+            o = jnp.einsum("bkgqs,bskd->bqkgd", w, vv).reshape(S, 1,
+                                                               H * dh)
+            y = o.astype(x.dtype) @ layer["attn"]["wo"].astype(x.dtype)
+            x = x + y
+            if cfg.family == "moe":
+                h2, _ = mlp_mod.moe_apply(
+                    layer["moe"], rmsnorm(x, layer["norm2"], cfg.norm_eps),
+                    cfg)
+            else:
+                h2 = mlp_mod.mlp_apply(
+                    layer["mlp"], rmsnorm(x, layer["norm2"], cfg.norm_eps),
+                    cfg)
+            x = x + h2
+            # scatter the new K/V into its page (inactive slots land in
+            # the null page and are never read unmasked)
+            pk = pk.at[pid, off].set(k_new[:, 0].astype(pk.dtype))
+            pv = pv.at[pid, off].set(v_new[:, 0].astype(pv.dtype))
+            return x, (pk, pv)
+
+        x, (pk, pv) = jax.lax.scan(
+            body, x, (params["blocks"], pool_k, pool_v))
+        logits = _head(params, x, cfg)[:, 0]                   # (S,V)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = jnp.isfinite(logits).all()
+        return pk, pv, nxt, ok
+
+    return step
+
+
+def _make_prefill_write(cfg: ModelConfig, page_size: int):
+    """Prefill one request (padded to a whole number of pages) and write
+    its prompt K/V into the allocated pages.
+
+    (params, pool_k, pool_v, tokens(1,Sb), true_len, pages(n_pp,))
+      -> (pool_k', pool_v', first_token, ok)
+    """
+
+    def fn(params, pool_k, pool_v, tokens, true_len, pages):
+        logits, _, cache = forward(params, {"tokens": tokens}, cfg,
+                                   return_cache=True)
+        last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1,
+                                            axis=0, keepdims=False)
+        first = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        # zero the padded tail so page contents match the contiguous
+        # oracle's zero-initialized cache bit-for-bit
+        keep = (jnp.arange(tokens.shape[1])
+                < true_len)[None, None, :, None, None]
+        k = jnp.where(keep, cache["k"], 0).astype(pool_k.dtype)[:, 0]
+        v = jnp.where(keep, cache["v"], 0).astype(pool_v.dtype)[:, 0]
+        L = k.shape[0]
+        n_pp = pages.shape[0]
+        k = k.reshape(L, n_pp, page_size, *k.shape[2:])
+        v = v.reshape(L, n_pp, page_size, *v.shape[2:])
+        pool_k = pool_k.at[:, pages].set(k)
+        pool_v = pool_v.at[:, pages].set(v)
+        return pool_k, pool_v, first, jnp.isfinite(last).all()
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_program(cfg: ModelConfig, page_size: int):
+    return jax.jit(_make_paged_decode(cfg, page_size))
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_program(cfg: ModelConfig, page_size: int):
+    return jax.jit(_make_prefill_write(cfg, page_size))
+
+
+# =====================================================================
+# the engine
+# =====================================================================
+class OnlineEngine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 slots: int = 4,
+                 page_size: int = 8,
+                 max_prompt_len: int = 16,
+                 max_new_cap: int = 8,
+                 n_pages: Optional[int] = None,
+                 policy: Optional[HRMPolicy] = None,
+                 kv_tier: Tier = Tier.NONE,
+                 scrub_every: Optional[int] = None,
+                 clock: str = "model",
+                 service: Optional[ServiceModel] = None,
+                 max_prefills_per_step: int = 2,
+                 max_queue: Optional[int] = None,
+                 debug_invariants: bool = False,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params_policy = policy
+        self.kv_tier = kv_tier
+        self.clock_mode = clock
+        self.service = service or ServiceModel()
+        self.max_prefills_per_step = max_prefills_per_step
+        self.max_queue = max_queue
+        self.debug_invariants = debug_invariants
+        self.rng = np.random.default_rng(seed)
+
+        max_pages = -(-(max_prompt_len + max_new_cap) // page_size)
+        if n_pages is None:
+            n_pages = slots * max_pages + 1          # +1: the null page
+        self.cache = PagedKVCache(cfg, n_pages=n_pages,
+                                  page_size=page_size, slots=slots,
+                                  max_pages_per_slot=max_pages)
+        self.sched = ContinuousBatchingScheduler(
+            self.cache, max_prefills_per_step=max_prefills_per_step)
+
+        # params domain: full protection under the given policy, or a
+        # sidecar-free leaf table (injection targeting only) when None
+        self.param_domain = MemoryDomain.protect(
+            params, policy if policy is not None
+            else HRMPolicy("unprotected", {}))
+        leaves = jax.tree_util.tree_leaves(params)
+        self._clean = {s.path: np.asarray(leaves[s.pos])
+                       for s in self.param_domain.spec.leaves}
+        self.scrub_every = (scrub_every if scrub_every is not None
+                            else (policy.scrub_interval if policy else 0))
+
+        # KV domain: its own root over the page pools
+        self.kv_domain = MemoryDomain.protect(
+            {"kv_cache": {"k": self.cache.pool_k,
+                          "v": self.cache.pool_v}}, kv_policy(kv_tier))
+
+        self._decode = _decode_program(cfg, page_size)
+        self._prefill = _prefill_program(cfg, page_size)
+        self._page_size = page_size
+
+    # ----------------------------------------------------------- helpers
+    def _params(self):
+        return self.param_domain.payload
+
+    def _kv_state(self) -> dict:
+        return {"kv_cache": {"k": self.cache.pool_k,
+                             "v": self.cache.pool_v}}
+
+    def _advance(self, now: float, model_cost: float, t_wall: float
+                 ) -> float:
+        return now + (t_wall if self.clock_mode == "wall" else model_cost)
+
+    def describe(self) -> str:
+        ps = self.param_domain.stats()
+        ks = self.kv_domain.stats()
+        pol = self.params_policy.name if self.params_policy else "none"
+        return (f"params[{pol}]: {ps.summary()}\n"
+                f"kv_cache[{self.kv_tier.value}]: {ks.summary()}\n"
+                f"pages={self.cache.n_pages} x {self._page_size} tokens, "
+                f"slots={self.cache.slots}, "
+                f"max_pages/slot={self.cache.max_pages_per_slot}")
+
+    # ------------------------------------------------------------ prefill
+    def _run_prefill(self, req: Request, pages: np.ndarray
+                     ) -> Tuple[int, bool, float]:
+        # only prompt pages are written at prefill; decode fills the rest
+        n_pp = -(-req.prompt_len // self._page_size)
+        sb = n_pp * self._page_size
+        tokens = np.zeros((1, sb), np.int32)
+        tokens[0, :req.prompt_len] = req.prompt
+        t0 = time.perf_counter()
+        pk, pv, first, ok = self._prefill(
+            self._params(), self.cache.pool_k, self.cache.pool_v,
+            jnp.asarray(tokens), jnp.int32(req.prompt_len),
+            jnp.asarray(pages[:n_pp]))
+        first = int(first)
+        ok = bool(ok)
+        t_wall = time.perf_counter() - t0
+        self.cache.adopt_pools(pk, pv)
+        return first, ok, t_wall
+
+    # -------------------------------------------------------- fault plane
+    def _inject_one(self, counters: SLOCounters) -> None:
+        pb = self.param_domain.stats().payload_bytes
+        kb = self.kv_domain.stats().payload_bytes
+        if self.rng.random() < pb / max(pb + kb, 1):
+            self.param_domain, _ = self.param_domain.inject(self.rng, 1)
+            counters.injected_params += 1
+        else:
+            self.kv_domain, _ = self.kv_domain.inject(self.rng, 1)
+            kv = self.kv_domain.payload["kv_cache"]
+            self.cache.adopt_pools(kv["k"], kv["v"])
+            counters.injected_kv += 1
+
+    def _scrub_params(self, counters: SLOCounters) -> None:
+        self.param_domain, rep = self.param_domain.scrub()
+        c, u = rep.totals()
+        counters.params_corrected += c
+        counters.params_detected += u
+        needs = rep.needs_recovery()
+        if needs:
+            self.param_domain, events = self.param_domain.recover(
+                rep, clean_copy=lambda p: self._clean[p], needs=needs)
+            counters.charge_recoveries(len(events))
+
+    def _scrub_kv(self, counters: SLOCounters) -> None:
+        self.kv_domain, rep = self.kv_domain.scrub()
+        c, u = rep.totals()
+        counters.kv_corrected += c
+        counters.kv_detected += u
+        if c:                            # SEC-DED repaired pool words
+            kv = self.kv_domain.payload["kv_cache"]
+            self.cache.adopt_pools(kv["k"], kv["v"])
+
+    def _crash_reset(self, router: RequestRouter, counters: SLOCounters
+                     ) -> None:
+        """Non-finite logits: the server 'crashed'. Charge the MTTR,
+        reload params from the clean copy, wipe the KV pools, and requeue
+        every in-flight request from scratch."""
+        counters.charge_crash()
+        clean = {s.path for s in self.param_domain.spec.leaves}
+        leaves = [jnp.asarray(self._clean[s.path])
+                  for s in self.param_domain.spec.leaves]
+        payload = jax.tree_util.tree_unflatten(
+            self.param_domain.spec.treedef, leaves)
+        pol = (self.params_policy if self.params_policy is not None
+               else HRMPolicy("unprotected", {}))
+        self.param_domain = MemoryDomain.protect(payload, pol)
+        assert clean == {s.path for s in self.param_domain.spec.leaves}
+        for req in reversed(self.sched.evict_all()):
+            router.requeue(req)
+        self.cache.adopt_pools(jnp.zeros_like(self.cache.pool_k),
+                               jnp.zeros_like(self.cache.pool_v))
+        self.kv_domain = MemoryDomain.protect(self._kv_state(),
+                                              kv_policy(self.kv_tier))
+
+    # ---------------------------------------------------------------- run
+    def run(self, trace: List[Request], *, storm_errors: int = 0,
+            month_minutes: float = MINUTES_PER_MONTH,
+            max_iters: int = 200_000) -> Tuple[SLOReport, Dict[int,
+                                                               List[int]]]:
+        """Serve the trace to completion. Returns the SLO report and a
+        ``{rid: generated tokens}`` map (for golden comparison)."""
+        router = RequestRouter(trace, max_queue=self.max_queue)
+        counters = SLOCounters()
+        last_arrival = max((r.arrival for r in trace), default=0.0)
+        span = max(last_arrival, 1e-6)
+        storm = deque(np.sort(self.rng.uniform(0.0, span, storm_errors)))
+        now = 0.0
+        it = 0
+        while not (router.drained and self.sched.n_active == 0):
+            if it >= max_iters:
+                raise RuntimeError(f"engine wedged after {max_iters} "
+                                   f"iterations")
+            # 1. access-path KV check: catches strikes injected after the
+            #    previous refresh, before any re-encode can launder them
+            if self.kv_tier is not Tier.NONE:
+                self._scrub_kv(counters)
+            # 2. params patrol scrub on the policy cadence
+            if (self.params_policy is not None and self.scrub_every > 0
+                    and it > 0 and it % self.scrub_every == 0):
+                self._scrub_params(counters)
+            # 3. route arrivals, admit prefills into free slots
+            router.poll(now)
+            admitted = 0
+            while admitted < self.max_prefills_per_step:
+                req = router.peek()
+                if req is None:
+                    break
+                if self.cache.pages_needed(req.footprint_tokens()) > \
+                        self.cache.max_pages_per_slot:
+                    router.take()            # can never fit: shed it
+                    router.shed.append(req)
+                    continue
+                if not self.sched.can_admit(req):
+                    break
+                router.take()
+                slot = self.sched.free_slot()
+                pages = self.cache.alloc(slot, req.footprint_tokens())
+                first, ok, t_wall = self._run_prefill(req, pages)
+                counters.prefills += 1
+                now = self._advance(
+                    now, self.service.prefill_cost(req.prompt_len), t_wall)
+                if not ok:
+                    self.cache.release(slot)
+                    router.requeue(req)
+                    self._crash_reset(router, counters)
+                    break
+                self.sched.admit(req, first, now)
+                admitted += 1
+            # 4. one continuous-batching decode step over every slot
+            if self.sched.n_active:
+                tokens, pos = self.sched.batch_inputs()
+                t0 = time.perf_counter()
+                pk, pv, nxt, ok = self._decode(
+                    self._params(), self.cache.pool_k, self.cache.pool_v,
+                    self.cache.device_table(), jnp.asarray(tokens),
+                    jnp.asarray(pos))
+                nxt = np.asarray(nxt)
+                ok = bool(ok)
+                t_wall = time.perf_counter() - t0
+                self.cache.adopt_pools(pk, pv)
+                counters.decode_steps += 1
+                now = self._advance(
+                    now, self.service.decode_cost(self.sched.n_active),
+                    t_wall)
+                if ok:
+                    self.sched.record_step(nxt, now)
+                else:
+                    self._crash_reset(router, counters)
+            elif not router.queue:
+                nxt_t = router.next_arrival()
+                if nxt_t is not None:
+                    now = max(now, nxt_t)    # idle: jump to next arrival
+            # 5. write-path ECC: re-encode the KV sidecar over this
+            #    step's legitimate writes
+            if self.kv_tier is not Tier.NONE:
+                self.kv_domain = self.kv_domain.refresh(self._kv_state())
+            else:
+                self.kv_domain = self.kv_domain.adopt(self._kv_state())
+            # 6. the storm: fire every error due by the current clock
+            while storm and storm[0] <= now:
+                storm.popleft()
+                self._inject_one(counters)
+            if self.debug_invariants:
+                self.cache.check_invariants()
+            it += 1
+        # drain the storm tail + one final scrub so every injected error
+        # is detected/recovered and accounted before availability is read
+        while storm:
+            storm.popleft()
+            self._inject_one(counters)
+        if self.kv_tier is not Tier.NONE:
+            self._scrub_kv(counters)
+        if self.params_policy is not None:
+            self._scrub_params(counters)
+        report = build_report(
+            self.sched.completed, n_requests=len(trace),
+            shed=len(router.shed), elapsed=now, counters=counters,
+            peak_active=self.sched.peak_active,
+            peak_queue=router.peak_queue, month_minutes=month_minutes)
+        responses = {c.req.rid: list(c.tokens)
+                     for c in self.sched.completed}
+        return report, responses

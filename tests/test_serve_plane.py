@@ -1,0 +1,215 @@
+"""Online serving plane: paged-KV allocator invariants, bit-identity of
+paged decode against the contiguous-cache oracle, continuous-batching
+correctness under staggered arrivals, and the SLO/availability harness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.core import DESIGN_POINTS, HRMPolicy, Tier
+from repro.models import init_params
+from repro.runtime.serve_loop import serve_batch
+from repro.serve import (NULL_PAGE, OnlineEngine, PagedKVCache, Request,
+                         RequestRouter, TrafficConfig, generate_trace,
+                         incorrect_rate)
+
+CFG = get_tiny("llama3-8b")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(b, s0, seed=1):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (b, s0),
+                                         0, CFG.vocab_size), np.int32)
+
+
+def _trace(prompts, arrivals, max_new):
+    return [Request(rid=i, arrival=float(arrivals[i]), prompt=prompts[i],
+                    max_new=max_new) for i in range(len(prompts))]
+
+
+# ------------------------------------------------------- paged allocator
+def test_allocator_no_aliasing_and_no_leak():
+    cache = PagedKVCache(CFG, n_pages=9, page_size=8, slots=3,
+                         max_pages_per_slot=3)
+    p0 = cache.alloc(0, 17)          # 3 pages
+    p1 = cache.alloc(1, 8)           # 1 page
+    assert len(p0) == 3 and len(p1) == 1
+    assert NULL_PAGE not in set(p0) | set(p1)
+    assert not set(p0.tolist()) & set(p1.tolist())
+    cache.check_invariants()
+    assert cache.free_pages == 8 - 4
+    cache.release(0)
+    cache.check_invariants()
+    assert cache.free_pages == 7
+    # released pages are reusable; slot 0 is reusable
+    cache.alloc(0, 24)
+    cache.check_invariants()
+
+
+def test_allocator_capacity_and_double_alloc_guards():
+    cache = PagedKVCache(CFG, n_pages=4, page_size=8, slots=2,
+                         max_pages_per_slot=2)
+    with pytest.raises(ValueError):
+        cache.alloc(0, 100)          # > max_pages_per_slot
+    cache.alloc(0, 16)
+    with pytest.raises(RuntimeError):
+        cache.alloc(0, 8)            # slot already holds pages
+    with pytest.raises(MemoryError):
+        cache.alloc(1, 16)           # only 1 free page left
+    assert not cache.can_admit(16) and cache.can_admit(8)
+
+
+def test_router_sheds_on_bounded_queue():
+    trace = [Request(rid=i, arrival=0.0,
+                     prompt=np.zeros(4, np.int32), max_new=2)
+             for i in range(5)]
+    router = RequestRouter(trace, max_queue=3)
+    router.poll(1.0)
+    assert len(router) == 3 and len(router.shed) == 2
+    assert router.drained is False
+
+
+# ----------------------------------------------------------- bit-identity
+def test_paged_decode_bit_identical_to_contiguous(params):
+    """Same batch through the paged engine and the contiguous-cache
+    serve_batch oracle -> bitwise-equal token streams."""
+    b, s0, new = 3, 8, 8
+    prompts = _prompts(b, s0)
+    oracle, _ = serve_batch(CFG, params, jnp.asarray(prompts), new)
+    eng = OnlineEngine(CFG, params, slots=b, page_size=8, max_prompt_len=s0,
+                       max_new_cap=new, max_prefills_per_step=b,
+                       debug_invariants=True)
+    _, resp = eng.run(_trace(prompts, [0.0] * b, new))
+    got = np.stack([resp[i] for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(oracle), got)
+
+
+def test_continuous_batching_staggered_matches_solo_oracle(params):
+    """Requests arriving mid-stream join the running decode batch and
+    still produce exactly the tokens a dedicated B=1 server would."""
+    b, s0, new = 4, 8, 6
+    prompts = _prompts(b, s0, seed=2)
+    eng = OnlineEngine(CFG, params, slots=2, page_size=8, max_prompt_len=s0,
+                       max_new_cap=new, max_prefills_per_step=1,
+                       debug_invariants=True)
+    rep, resp = eng.run(_trace(prompts, [0.03 * i for i in range(b)], new))
+    assert rep.completed == b
+    assert rep.peak_active == 2          # the batch really was shared
+    for i in range(b):
+        solo, _ = serve_batch(CFG, params, jnp.asarray(prompts[i:i + 1]),
+                              new)
+        np.testing.assert_array_equal(np.asarray(solo)[0],
+                                      np.asarray(resp[i]))
+    # no slot or page leaked across the run
+    eng.cache.check_invariants()
+    assert eng.sched.n_active == 0
+    assert eng.cache.free_pages == eng.cache.n_pages - 1
+
+
+# ------------------------------------------------------------ SLO harness
+def test_slo_smoke_zero_injection(params):
+    tc = TrafficConfig(n_requests=12, rate=40.0, seed=3)
+    trace = generate_trace(tc, CFG.vocab_size)
+    eng = OnlineEngine(CFG, params, slots=3, page_size=8,
+                       max_prompt_len=tc.max_prompt_len,
+                       max_new_cap=tc.max_new_cap, debug_invariants=True)
+    rep, resp = eng.run(trace)
+    assert rep.completed == len(trace) and rep.shed == 0
+    assert rep.availability == 1.0       # no storm, no downtime, exactly
+    assert rep.availability >= 0.9990
+    assert rep.throughput_rps > 0 and rep.tokens_per_s > 0
+    assert rep.ttft_p99_s >= rep.ttft_p50_s > 0
+    assert incorrect_rate(resp, resp) == 0.0
+
+
+def test_slo_under_storm_meets_availability_bar(params):
+    """One compressed server-month of errors against detect_recover params
+    + Par+R KV pages: recoveries happen, availability stays >= 99.90%."""
+    tc = TrafficConfig(n_requests=12, rate=40.0, seed=3)
+    trace = generate_trace(tc, CFG.vocab_size)
+
+    def engine(**kw):
+        return OnlineEngine(CFG, params, slots=3, page_size=8,
+                            max_prompt_len=tc.max_prompt_len,
+                            max_new_cap=tc.max_new_cap, seed=1, **kw)
+
+    _, golden = engine().run(trace)
+    eng = engine(policy=DESIGN_POINTS["detect_recover"](),
+                 kv_tier=Tier.PARITY_R, scrub_every=4,
+                 debug_invariants=True)
+    rep, resp = eng.run(trace, storm_errors=540)
+    rep.incorrect_rate = incorrect_rate(golden, resp)
+    assert rep.completed == len(trace)
+    assert rep.counters["injected_params"] + rep.counters["injected_kv"] \
+        == 540
+    assert rep.counters["recovery_events"] > 0
+    assert rep.availability >= 0.9990
+    assert 0.0 <= rep.incorrect_rate <= 1.0
+
+
+def test_engine_unprotected_params_storm_runs(params):
+    """No policy at all: injections land unrepaired; the engine must
+    still finish (crash/requeue path) and report availability <= 1."""
+    tc = TrafficConfig(n_requests=6, rate=40.0, seed=5)
+    trace = generate_trace(tc, CFG.vocab_size)
+    eng = OnlineEngine(CFG, params, slots=2, page_size=8,
+                       max_prompt_len=tc.max_prompt_len,
+                       max_new_cap=tc.max_new_cap, seed=2)
+    rep, _ = eng.run(trace, storm_errors=20)
+    assert rep.completed == len(trace)
+    assert rep.availability <= 1.0
+
+
+# ------------------------------------------------------ satellite: loops
+def test_serve_batch_policy_none_builds_no_domain(params, monkeypatch):
+    """policy=None + no injection must not construct a MemoryDomain (and
+    must keep sidecar_overhead at zero)."""
+    from repro.core.domain import MemoryDomain
+    from repro.runtime import serve_loop
+
+    calls = []
+    orig = MemoryDomain.protect.__func__
+
+    def spy(cls, state, policy, **kw):
+        calls.append(policy.name)
+        return orig(cls, state, policy, **kw)
+
+    monkeypatch.setattr(serve_loop.MemoryDomain, "protect",
+                        classmethod(spy))
+    prompts = jnp.asarray(_prompts(2, 8))
+    toks, report = serve_batch(CFG, params, prompts, 4, policy=None)
+    assert calls == []
+    assert report.sidecar_overhead == 0.0
+    assert toks.shape == (2, 4)
+    # with injection enabled, the (sidecar-free) leaf table is still built
+    toks2, report2 = serve_batch(CFG, params, prompts, 4, policy=None,
+                                 error_rate_per_token=1.0)
+    assert calls == ["unprotected"]
+    assert report2.sidecar_overhead == 0.0
+    assert report2.injected > 0
+
+
+def test_launchers_expose_no_tiny():
+    """--tiny was store_true with default True: full-size was unreachable.
+    Both serving launchers must accept --no-tiny now."""
+    from repro.launch import serve as serve_mod
+    from repro.launch import serve_online as online_mod
+    for mod in (serve_mod, online_mod):
+        ap = mod.build_parser()
+        assert ap.parse_args([]).tiny is True
+        assert ap.parse_args(["--no-tiny"]).tiny is False
+        assert ap.parse_args(["--tiny"]).tiny is True
+
+
+def test_serve_online_dry_run(capsys):
+    from repro.launch.serve_online import main
+    rc = main(["--dry-run", "--requests", "9", "--storm-errors", "100",
+               "--policy", "detect_recover", "--kv-tier", "parity_r"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "9 requests" in out and "parity_r" in out

@@ -21,17 +21,34 @@ from repro.models import init_params
 
 def run() -> List[Row]:
     rows: List[Row] = []
+    # strong-ECC points (dected_server / burst_dr_l) get their outcome
+    # rates MEASURED through the DEC-TED / BURST Pallas kernels; the five
+    # published points stay on the calibrated branch (pinned numbers)
+    from repro.core import Tier, measured_tier_rates
+    from repro.core.availability import MULTI_BIT_FRACTION
+    from repro.core.costmodel import _MEASURED_ECC
+    from repro.core.errormodel import DEFAULT_ADJACENT_FRACTION
+    rates = measured_tier_rates((Tier.DECTED, Tier.BURST),
+                                MULTI_BIT_FRACTION,
+                                DEFAULT_ADJACENT_FRACTION)
     costs = paper_design_costs()
-    avail = paper_design_availability()
+    avail = paper_design_availability(tier_rates=rates)
     for name in costs:
         c, a = costs[name], avail[name]
+        src = "measured" if name in _MEASURED_ECC else "calibrated"
         rows.append(Row(
             f"fig5/{name}", 0.0,
             f"mem_saving={c.memory_saving:.4f} "
             f"server_saving={c.server_saving:.4f} "
             f"availability={a.availability:.5f} "
             f"crashes_mo={a.crashes_per_month:.2f} "
-            f"incorrect_per_M={a.incorrect_per_million:.2f}"))
+            f"incorrect_per_M={a.incorrect_per_million:.2f} "
+            f"ecc={src}"))
+    # the measured DEC-TED point: every injected class corrected by the
+    # exhaustively-proven kernels -> zero crashes/SDC at a 15/64 premium
+    assert avail["dected_server"].availability == 1.0
+    assert avail["dected_server"].incorrect_per_million == 0.0
+    assert avail["burst_dr_l"].availability >= 0.9990
 
     # paper-claim assertions (reproduction gate)
     assert abs(costs["detect_recover"].memory_saving - 0.097) < 0.005

@@ -60,6 +60,22 @@ def run() -> List[Row]:
     rows.append(Row("scrub/domain_reencode", us_dom_enc,
                     f"speedup_vs_per_leaf={us_reencode / us_dom_enc:.2f}x"))
 
+    # stronger codes on the same payload: the 15-mask + Chien-search
+    # DEC-TED kernel and the interleaved SEC-DAEC burst kernel vs the
+    # SEC-DED baseline above (capacity table: 8 vs 14 vs 15 check bits)
+    from repro.core import HRMPolicy, Tier
+    for tier in (Tier.BURST, Tier.DECTED):
+        pol_t = HRMPolicy(f"bench-{tier.value}", {}, default=tier)
+        dom_t = MemoryDomain.protect(state["params"], pol_t)
+        us_t = time_call(lambda: dom_t.scrub()[0].payload, warmup=1,
+                         iters=3)
+        rows.append(Row(f"scrub/domain_full_pass_{tier.value}", us_t,
+                        f"ratio_vs_secded={us_t / us_dom:.2f}x"))
+        us_t_enc = time_call(lambda: dom_t.refresh().sidecar, warmup=1,
+                             iters=3)
+        rows.append(Row(f"scrub/domain_reencode_{tier.value}", us_t_enc,
+                        f"ratio_vs_secded={us_t_enc / us_dom_enc:.2f}x"))
+
     for interval in (10, 50, 100):
         ov = us_dom / (us_step * interval)
         rows.append(Row(f"scrub/overhead_interval_{interval}", 0.0,

@@ -8,11 +8,13 @@ verb API ``protect`` / ``scrub`` / ``recover`` / ``inject`` / ``refresh`` /
 ``stats`` and tier-grouped batched Pallas execution.
 
 Supporting pieces: reliability tiers and the Table-1 capacity numbers
-(``tiers``), region->tier policies and the five paper design points
+(``tiers``), region->tier policies and the evaluated design points — the
+paper's five plus the strong-ECC ``dected_server`` / ``burst_dr_l``
 (``policy``), error models and injection plans (``errormodel``), the Fig.2
-characterization campaign (``characterize``), the Fig.5 cost/availability
-models (``costmodel``/``availability``), and the beyond-paper policy
-auto-tuner (``autopolicy``). The legacy per-leaf path (``build_sidecar`` /
+characterization campaign (``characterize``), measured per-tier ECC
+outcome rates driven through the real kernels (``eccmeasure``), the Fig.5
+cost/availability models (``costmodel``/``availability``), and the
+beyond-paper policy auto-tuner (``autopolicy``). The legacy per-leaf path (``build_sidecar`` /
 ``scrub`` / ``Scrubber``) is kept as a deprecated shim and as the reference
 implementation the batched path is verified bit-identical against.
 
@@ -39,11 +41,19 @@ from repro.core.costmodel import (  # noqa: F401
     DesignPointCost, RegionProfile, WEBSEARCH, paper_design_costs,
     policy_cost_saving, region_fractions,
 )
-from repro.core.errormodel import ErrorModel, InjectionPlan  # noqa: F401
+from repro.core.eccmeasure import (  # noqa: F401
+    TierOutcomeRates, measure_class_rates, measured_outcome_rates,
+    measured_tier_rates,
+)
+from repro.core.errormodel import (  # noqa: F401
+    DEFAULT_ADJACENT_FRACTION, DEFAULT_MULTI_BIT_FRACTION, ErrorModel,
+    InjectionPlan,
+)
 from repro.core.injection import Injector  # noqa: F401
 from repro.core.policy import (  # noqa: F401
-    DESIGN_POINTS, HRMPolicy, REGIONS, classify_path, consumer_pc,
-    detect_recover, detect_recover_l, less_tested, typical_server,
+    DESIGN_POINTS, HRMPolicy, REGIONS, burst_dr_l, classify_path,
+    consumer_pc, detect_recover, detect_recover_l, dected_server,
+    less_tested, typical_server,
 )
 from repro.core.recovery import (  # noqa: F401
     RecoveryManager, Response, RestartRequired, RetirementMap,
@@ -53,4 +63,6 @@ from repro.core.sidecar import (  # noqa: F401
     ScrubReport, build_sidecar, scrub, sidecar_bytes, state_bytes,
 )
 from repro.core.taxonomy import Outcome, OutcomeStats  # noqa: F401
-from repro.core.tiers import TIER_TABLE, Tier, capacity_overhead  # noqa: F401
+from repro.core.tiers import (  # noqa: F401
+    TIER_TABLE, Tier, capacity_overhead, stored_overhead,
+)

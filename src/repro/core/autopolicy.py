@@ -28,8 +28,11 @@ from repro.core.errormodel import ErrorModel
 from repro.core.policy import HRMPolicy
 from repro.core.tiers import Tier
 
-# search order: cheapest first (capacity premium ascending)
-_TIER_ORDER = (Tier.NONE, Tier.PARITY_R, Tier.SECDED)
+# search order: cheapest first (capacity premium ascending); BURST (14/64)
+# and DEC-TED (15/64) extend the space above SEC-DED for regions whose
+# vulnerability cannot be met by single-bit correction
+_TIER_ORDER = (Tier.NONE, Tier.PARITY_R, Tier.SECDED, Tier.BURST,
+               Tier.DECTED)
 
 
 @dataclass
@@ -89,7 +92,12 @@ def tune_policy(profile: RegionProfile, vuln: VulnProfile, *,
 
     ok, _ = feasible(assign)
     if not ok:
-        raise ValueError("even all-SEC-DED cannot meet the target under "
+        # escalate the starting point to the strongest tier before giving
+        # up — the relax loop below then walks each region back down
+        assign = {r: Tier.DECTED for r in regions}
+        ok, _ = feasible(assign)
+    if not ok:
+        raise ValueError("even all-DEC-TED cannot meet the target under "
                          "this error model")
 
     # regions in descending byte fraction: relax the biggest savings first

@@ -10,18 +10,29 @@ Event flow for each incident memory error, by tier of the region it strikes:
   SECDED    single-bit corrected silently; double-bit detected-uncorrectable
             -> software reload under an HRM response, or a machine-check
             CRASH on the homogeneous typical server (no software layer)
-  MIRROR/DECTED  corrected; negligible escape at these rates
+  MIRROR/DECTED/BURST  corrected; negligible escape at these rates
 
 Every constant below is calibrated; docs/DESIGN.md §8.2 records each
 value's provenance and the published Fig.5 numbers they reproduce
 (pinned in tests/test_explore.py).
+
+``evaluate_availability`` also accepts *measured* per-tier outcome rates
+(``core.eccmeasure.TierOutcomeRates``): when ``tier_rates`` carries an
+entry for a region's tier, the calibrated branch above is replaced by the
+rates obtained by driving that tier's real Pallas kernels —
+corrected events vanish, detected events become software reloads (or
+machine-check crashes without a software layer), silent events are
+consumed like unprotected ones. ``launch/explore.py`` uses this for the
+DEC-TED / BURST design points so their Fig.5 rows are measured, not
+assumed.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Mapping
+from typing import Dict, Mapping, Optional
 
 from repro.core.costmodel import RegionProfile, WEBSEARCH
+from repro.core.eccmeasure import TierOutcomeRates
 from repro.core.tiers import Tier
 
 ERRORS_PER_SERVER_MONTH = 540.0
@@ -70,6 +81,8 @@ def evaluate_availability(name: str,
                           less_tested: bool = False,
                           software_response: bool = True,
                           errors_per_month: float = ERRORS_PER_SERVER_MONTH,
+                          tier_rates: Optional[Mapping[
+                              Tier, TierOutcomeRates]] = None,
                           ) -> AvailabilityResult:
     e_total = errors_per_month * (LESS_TESTED_RATE_FACTOR if less_tested
                                   else 1.0)
@@ -81,7 +94,16 @@ def evaluate_availability(name: str,
         tier = tiers_by_region.get(region, Tier.NONE)
         pc = vuln.p_crash.get(region, 0.1)
         ri = vuln.r_incorrect.get(region, 1.0)
-        if tier == Tier.NONE:
+        rates = tier_rates.get(tier) if tier_rates else None
+        if rates is not None:
+            # measured branch: outcome rates from the tier's real kernels
+            detected = e * rates.detected
+            if software_response or tier == Tier.PARITY_R:
+                recoveries += detected   # Par+R always implies the reload
+            else:
+                crashes += detected      # machine-check on typical HW
+            consumed = e * rates.silent
+        elif tier == Tier.NONE:
             consumed = e
         elif tier == Tier.PARITY_R:
             detected = e * (1.0 - MULTI_BIT_FRACTION)
@@ -94,7 +116,7 @@ def evaluate_availability(name: str,
             else:
                 crashes += ue                   # machine-check on typical HW
             consumed = 0.0
-        else:                                   # DECTED / MIRROR
+        else:                                   # DECTED / BURST / MIRROR
             consumed = 0.0
         crashes += consumed * pc
         incorrect += consumed * (1.0 - pc) * ri
@@ -105,9 +127,18 @@ def evaluate_availability(name: str,
                               downtime, avail)
 
 
-def paper_design_availability() -> Dict[str, AvailabilityResult]:
-    """The five Fig. 5 design points on the WebSearch profile."""
-    from repro.core.costmodel import _PAPER_POLICIES, _LESS_TESTED
+def paper_design_availability(
+        tier_rates: Optional[Mapping[Tier, TierOutcomeRates]] = None,
+        ) -> Dict[str, AvailabilityResult]:
+    """The Fig. 5 design points on the WebSearch profile.
+
+    ``tier_rates`` (when given) applies measured kernel outcome rates to
+    the strong-ECC design points (``dected_server``, ``burst_dr_l``); the
+    five published points always stay on the calibrated branch so the
+    pinned paper numbers are untouched.
+    """
+    from repro.core.costmodel import (_LESS_TESTED, _MEASURED_ECC,
+                                      _PAPER_POLICIES, _SOFTWARE_RESPONSE)
     out = {}
     for name, pol in _PAPER_POLICIES.items():
         out[name] = evaluate_availability(
@@ -115,7 +146,7 @@ def paper_design_availability() -> Dict[str, AvailabilityResult]:
             less_tested=name in _LESS_TESTED,
             # the homogeneous typical/less-tested servers have no software
             # response layer: an uncorrectable ECC error is a crash
-            software_response=name in ("detect_recover", "detect_recover_l",
-                                       "consumer_pc"),
+            software_response=name in _SOFTWARE_RESPONSE,
+            tier_rates=tier_rates if name in _MEASURED_ECC else None,
         )
     return out

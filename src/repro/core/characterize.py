@@ -128,6 +128,8 @@ def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
         for t in range(n_trials):
             s = specs[rng.choice(len(specs), p=weights)]
             clean_leaf = domain.leaf(s.path)
+            # unified strike mix: DEFAULT_MULTI_BIT_FRACTION of events add
+            # a second flip (half adjacent) — the §8.3 campaign mix
             plan = InjectionPlan.sample(rng, s.rows * LANES,
                                         errors_per_trial, hard)
             corrupted = domain.apply_plan(s.path, plan)

@@ -53,8 +53,21 @@ _PAPER_POLICIES: Dict[str, Dict[str, Tier]] = {
     "less_tested": {r: Tier.SECDED for r in WEBSEARCH.fractions},
     "detect_recover_l": {"private": Tier.SECDED, "heap": Tier.PARITY_R,
                          "stack": Tier.PARITY_R, "other": Tier.NONE},
+    # strong-ECC extensions beyond the paper's five: priced with the real
+    # sidecar code-bit widths (tiers.capacity_overhead), availability
+    # *measured* through the DEC-TED / BURST Pallas kernels
+    # (eccmeasure.measured_tier_rates) rather than calibrated
+    "dected_server": {r: Tier.DECTED for r in WEBSEARCH.fractions},
+    "burst_dr_l": {"private": Tier.BURST, "heap": Tier.PARITY_R,
+                   "stack": Tier.BURST, "other": Tier.NONE},
 }
-_LESS_TESTED = {"less_tested", "detect_recover_l"}
+_LESS_TESTED = {"less_tested", "detect_recover_l", "burst_dr_l"}
+# design points with the software recovery layer (Table 2): a
+# detected-uncorrectable error is a clean-copy reload, not a machine check
+_SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc",
+                      "burst_dr_l"}
+# design points whose ECC outcomes come from kernel measurement
+_MEASURED_ECC = {"dected_server", "burst_dr_l"}
 
 
 def _tier_premium(tier: Tier) -> float:

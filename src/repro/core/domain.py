@@ -28,7 +28,8 @@ is position-independent, so results are bit-identical to the legacy path
 single jit-compiled computation cached per (domain structure, path subset).
 
 Pad rows (to make row counts divide the kernel block) hold zero words whose
-SEC-DED/parity code is also zero, so padding contributes no corrections.
+code bits are also zero (every tier's code is linear), so padding
+contributes no corrections.
 """
 from __future__ import annotations
 
@@ -48,6 +49,8 @@ from repro.core.recovery import Response, RestartRequired, RetirementMap
 from repro.core.sidecar import ScrubReport, _path_str
 from repro.core.tiers import Tier
 from repro.kernels import ops
+from repro.kernels.burst import burst_encode_words, burst_scrub_words
+from repro.kernels.dected import dected_encode_words, dected_scrub_words
 from repro.kernels.ops import BLOCK_ROWS, LANES, _round_rows
 from repro.kernels.parity import parity_check_words, parity_encode_words
 from repro.kernels.secded import secded_encode_words, secded_scrub_words
@@ -243,49 +246,44 @@ def _compiled_scrub(spec: DomainSpec, key: Optional[Tuple[str, ...]]
                     _scatter_rows(sc[name], sel, new[:sum(s.rows
                                                           for s in sel)])
 
-            if tier is Tier.DECTED:
-                packed = [ops.pack_words(leaves[s.pos]) for s in sel]
-                plo = _concat_pad([p.lo for p in packed], padded)
-                phi = _concat_pad([p.hi for p in packed], padded)
-                zeros = jnp.zeros_like(plo)
-                lo2, _, ecc_lo2, c1, u1 = secded_scrub_words(
-                    plo, zeros, pull("ecc_lo", jnp.uint32), block_rows=bm,
+            lo, hi = _gather_packed(leaves, sel, padded)
+            if tier is Tier.SECDED:
+                lo2, hi2, ecc2, c, u = secded_scrub_words(
+                    lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
                     interpret=ops.INTERPRET)
-                hi2, _, ecc_hi2, c2, u2 = secded_scrub_words(
-                    phi, zeros, pull("ecc_hi", jnp.uint32), block_rows=bm,
+                push("ecc", ecc2, jnp.uint8)
+            elif tier is Tier.DECTED:
+                lo2, hi2, ecc2, c, u = dected_scrub_words(
+                    lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
                     interpret=ops.INTERPRET)
-                push("ecc_lo", ecc_lo2, jnp.uint8)
-                push("ecc_hi", ecc_hi2, jnp.uint8)
-                c, u = c1 + c2, u1 + u2
+                push("ecc", ecc2, jnp.uint16)
+            elif tier is Tier.BURST:
+                lo2, hi2, ecc2, c, u = burst_scrub_words(
+                    lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
+                    interpret=ops.INTERPRET)
+                push("ecc", ecc2, jnp.uint16)
+            elif tier is Tier.PARITY_R:
+                # parity detects only: no corrected leaves, no writes
+                _err, cnt = parity_check_words(
+                    lo, hi, pull("par", jnp.uint32), block_rows=bm,
+                    interpret=ops.INTERPRET)
+                off = 0
+                for s in sel:
+                    unc[s.path] = jnp.sum(cnt[off:off + s.rows])
+                    off += s.rows
+                continue
+            elif tier is Tier.MIRROR:
+                err, _ = parity_check_words(
+                    lo, hi, pull("par", jnp.uint32), block_rows=bm,
+                    interpret=ops.INTERPRET)
+                mask = _parity_mask(err, lo)
+                lo2 = jnp.where(mask, pull("copy_lo"), lo)
+                hi2 = jnp.where(mask, pull("copy_hi"), hi)
+                c = jnp.sum(mask.astype(jnp.int32), axis=1,
+                            keepdims=True)
+                u = jnp.zeros_like(c)
             else:
-                lo, hi = _gather_packed(leaves, sel, padded)
-                if tier is Tier.SECDED:
-                    lo2, hi2, ecc2, c, u = secded_scrub_words(
-                        lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
-                        interpret=ops.INTERPRET)
-                    push("ecc", ecc2, jnp.uint8)
-                elif tier is Tier.PARITY_R:
-                    # parity detects only: no corrected leaves, no writes
-                    _err, cnt = parity_check_words(
-                        lo, hi, pull("par", jnp.uint32), block_rows=bm,
-                        interpret=ops.INTERPRET)
-                    off = 0
-                    for s in sel:
-                        unc[s.path] = jnp.sum(cnt[off:off + s.rows])
-                        off += s.rows
-                    continue
-                elif tier is Tier.MIRROR:
-                    err, _ = parity_check_words(
-                        lo, hi, pull("par", jnp.uint32), block_rows=bm,
-                        interpret=ops.INTERPRET)
-                    mask = _parity_mask(err, lo)
-                    lo2 = jnp.where(mask, pull("copy_lo"), lo)
-                    hi2 = jnp.where(mask, pull("copy_hi"), hi)
-                    c = jnp.sum(mask.astype(jnp.int32), axis=1,
-                                keepdims=True)
-                    u = jnp.zeros_like(c)
-                else:
-                    raise ValueError(tier)
+                raise ValueError(tier)
 
             off = 0
             for s in sel:
@@ -313,23 +311,19 @@ def _compiled_encode(spec: DomainSpec, key: Optional[Tuple[str, ...]]
     partial = key is not None
 
     def encode_tier(tier, leaves, sel, padded, bm):
-        if tier is Tier.DECTED:
-            packed = [ops.pack_words(leaves[s.pos]) for s in sel]
-            plo = _concat_pad([p.lo for p in packed], padded)
-            phi = _concat_pad([p.hi for p in packed], padded)
-            zeros = jnp.zeros_like(plo)
-            return {
-                "ecc_lo": secded_encode_words(
-                    plo, zeros, block_rows=bm,
-                    interpret=ops.INTERPRET).astype(jnp.uint8),
-                "ecc_hi": secded_encode_words(
-                    phi, zeros, block_rows=bm,
-                    interpret=ops.INTERPRET).astype(jnp.uint8)}
         lo, hi = _gather_packed(leaves, sel, padded)
         if tier is Tier.SECDED:
             return {"ecc": secded_encode_words(
                 lo, hi, block_rows=bm,
                 interpret=ops.INTERPRET).astype(jnp.uint8)}
+        if tier is Tier.DECTED:
+            return {"ecc": dected_encode_words(
+                lo, hi, block_rows=bm,
+                interpret=ops.INTERPRET).astype(jnp.uint16)}
+        if tier is Tier.BURST:
+            return {"ecc": burst_encode_words(
+                lo, hi, block_rows=bm,
+                interpret=ops.INTERPRET).astype(jnp.uint16)}
         if tier is Tier.PARITY_R:
             return {"par": parity_encode_words(
                 lo, hi, block_rows=bm,
@@ -549,13 +543,23 @@ class MemoryDomain:
     # ------------------------------------------------------ injection
     def inject(self, rng, n: int = 1, *, hard: bool = False,
                paths: Optional[Iterable[str]] = None,
-               multi_bit_fraction: float = 0.0,
+               multi_bit_fraction: Optional[float] = None,
+               adjacent_fraction: Optional[float] = None,
                errors_per_site: int = 1
                ) -> Tuple["MemoryDomain", List[dict]]:
         """Strike ``n`` random protected-or-not leaves with bit flips,
         sampled byte-weighted (errors strike uniformly over physical
         bytes). Hard errors are recorded in the domain's hard-error map
-        and re-assert on every ``reassert_hard`` until retired."""
+        and re-assert on every ``reassert_hard`` until retired.
+
+        ``multi_bit_fraction``/``adjacent_fraction`` default to the
+        policy's ``ErrorModel`` (0.02 multi-bit, half of those adjacent
+        bursts) — pass 0.0 explicitly for pure single-bit strikes."""
+        em = self.spec.policy.error_model
+        if multi_bit_fraction is None:
+            multi_bit_fraction = em.multi_bit_fraction
+        if adjacent_fraction is None:
+            adjacent_fraction = em.adjacent_fraction
         rng = np.random.default_rng(rng)
         if paths is None:
             cands = self.spec.protectable
@@ -575,7 +579,8 @@ class MemoryDomain:
             s = cands[rng.choice(len(cands), p=weights)]
             plan = InjectionPlan.sample(rng, s.rows * LANES,
                                         errors_per_site, hard,
-                                        multi_bit_fraction)
+                                        multi_bit_fraction,
+                                        adjacent_fraction)
             leaves[s.pos] = ops.inject_bitflips(
                 leaves[s.pos], jnp.asarray(plan.word_idx),
                 jnp.asarray(plan.bit_idx))

@@ -19,13 +19,25 @@ import numpy as np
 LESS_TESTED_FACTOR = 4.0
 HOURS_PER_MONTH = 30 * 24
 
+# Fraction of injection events striking >1 bit of one 64-bit word. One
+# value, shared by the ErrorModel dataclass, ``InjectionPlan.sample`` and
+# every strike helper (``MemoryDomain.inject``, ``Injector.strike``) — the
+# seed shipped 0.02 in the dataclass but 0.0 in the helpers, so campaigns
+# silently never exercised the multi-bit path DESIGN.md §8.3 documents.
+DEFAULT_MULTI_BIT_FRACTION = 0.02
+# Of those multi-bit events, the fraction that are *adjacent* (bit i, i+1)
+# bursts rather than two independent bits — field studies (Meza+15,
+# arXiv:1901.03401) find spatially-correlated multi-bit faults dominate.
+DEFAULT_ADJACENT_FRACTION = 0.5
+
 
 @dataclass(frozen=True)
 class ErrorModel:
     # raw incident error events per GB of app data per month (unprotected)
     errors_per_gb_month: float = 67.5
     hard_fraction: float = 0.4          # sticky errors (device defects)
-    multi_bit_fraction: float = 0.02    # >1 bit in one 64-bit word
+    multi_bit_fraction: float = DEFAULT_MULTI_BIT_FRACTION
+    adjacent_fraction: float = DEFAULT_ADJACENT_FRACTION
     less_tested: bool = False
 
     @property
@@ -54,17 +66,27 @@ class InjectionPlan:
 
     @classmethod
     def sample(cls, rng: np.ndarray, n_words: int, n_errors: int,
-               hard: bool, multi_bit_fraction: float = 0.0,
+               hard: bool,
+               multi_bit_fraction: float = DEFAULT_MULTI_BIT_FRACTION,
+               adjacent_fraction: float = DEFAULT_ADJACENT_FRACTION,
                pad_to: int = 8) -> "InjectionPlan":
         rng = np.random.default_rng(rng)
         words = rng.integers(0, n_words, size=n_errors)
         bits = rng.integers(0, 64, size=n_errors)
-        # multi-bit events: add a second flip in the same word
+        # multi-bit events: add a second flip in the same word — adjacent
+        # (correlated burst) with p = adjacent_fraction, else a distinct
+        # random bit (never the same bit: two flips would cancel)
         extra_w, extra_b = [], []
-        for w in words:
+        for w, b in zip(words, bits):
             if rng.random() < multi_bit_fraction:
                 extra_w.append(w)
-                extra_b.append(rng.integers(0, 64))
+                if rng.random() < adjacent_fraction:
+                    b2 = b + 1 if b < 63 else b - 1
+                else:
+                    b2 = int(rng.integers(0, 63))
+                    if b2 >= b:
+                        b2 += 1
+                extra_b.append(b2)
         words = np.concatenate([words, np.array(extra_w, dtype=np.int64)])
         bits = np.concatenate([bits, np.array(extra_b, dtype=np.int64)])
         e = max(pad_to, -(-len(words) // pad_to) * pad_to)
@@ -72,4 +94,24 @@ class InjectionPlan:
         bi = np.zeros(e, np.int32)
         wi[:len(words)] = words
         bi[:len(bits)] = bits
+        return cls(wi, bi, hard)
+
+    @classmethod
+    def adjacent_burst(cls, rng: np.ndarray, n_words: int, n_bursts: int,
+                       hard: bool = False, pad_to: int = 8
+                       ) -> "InjectionPlan":
+        """A storm of pure adjacent double-bit bursts: every event flips
+        bits (b, b+1) of one word — the spatially-correlated failure mode
+        that is silent under parity, detected-uncorrectable under SEC-DED,
+        and correctable under the BURST / DEC-TED tiers."""
+        rng = np.random.default_rng(rng)
+        words = rng.integers(0, n_words, size=n_bursts)
+        bits = rng.integers(0, 63, size=n_bursts)
+        wi_list = np.repeat(words, 2)
+        bi_list = np.stack([bits, bits + 1], axis=1).reshape(-1)
+        e = max(pad_to, -(-len(wi_list) // pad_to) * pad_to)
+        wi = np.full(e, -1, np.int32)
+        bi = np.zeros(e, np.int32)
+        wi[:len(wi_list)] = wi_list
+        bi[:len(bi_list)] = bi_list
         return cls(wi, bi, hard)

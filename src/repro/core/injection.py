@@ -21,7 +21,8 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.errormodel import InjectionPlan
+from repro.core.errormodel import (DEFAULT_ADJACENT_FRACTION,
+                                   DEFAULT_MULTI_BIT_FRACTION, InjectionPlan)
 from repro.core.sidecar import _set_leaf, leaf_index
 from repro.kernels import ops
 
@@ -42,14 +43,16 @@ class Injector:
         return cls(np.random.default_rng(seed))
 
     def sample_into(self, state, path: str, n_errors: int = 1,
-                    hard: bool = False, multi_bit_fraction: float = 0.0,
+                    hard: bool = False,
+                    multi_bit_fraction: float = DEFAULT_MULTI_BIT_FRACTION,
+                    adjacent_fraction: float = DEFAULT_ADJACENT_FRACTION,
                     root: str = "params"):
         """Sample a plan for leaf ``path`` and apply it. Returns new state."""
         idx = leaf_index(state, root)
         leaf = idx[path]["leaf"]
         n_words = ops.words_per_tensor(leaf)
         plan = InjectionPlan.sample(self.rng, n_words, n_errors, hard,
-                                    multi_bit_fraction)
+                                    multi_bit_fraction, adjacent_fraction)
         if hard:
             self.live.append(LiveError(path, plan))
         return self.apply_plan(state, path, plan)

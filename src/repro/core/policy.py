@@ -1,5 +1,7 @@
 """HRM policy: the region -> tier mapping (the paper's granularity dimension
-at memory-region level) plus the five evaluated design points.
+at memory-region level) plus the evaluated design points (the paper's
+five, and two strong-ECC extensions measured through the DEC-TED / BURST
+kernels).
 
 Regions of a training/serving job's state (the TPU analogue of the paper's
 stack/heap/private classification) are derived from pytree paths:
@@ -150,10 +152,34 @@ def detect_recover_l() -> HRMPolicy:
         error_model=ErrorModel(less_tested=True))
 
 
+def dected_server() -> HRMPolicy:
+    """Strong homogeneous baseline: true DEC-TED everywhere (non-HRM).
+    Prices the 15/64 code-bit premium; availability is *measured* through
+    the DEC-TED Pallas kernels (``core.eccmeasure``), not assumed."""
+    return HRMPolicy("dected_server",
+                     {r: Tier.DECTED for r in REGIONS},
+                     default=Tier.DECTED)
+
+
+def burst_dr_l() -> HRMPolicy:
+    """HRM on less-tested devices with burst-correcting ECC on the
+    vulnerable regions: SEC-DAEC (adjacent-double correct) where
+    detect_recover_l used SEC-DED, Par+R on the bulky tolerant regions.
+    Survives the spatially-correlated multi-bit faults field studies
+    report dominating on marginal devices."""
+    base = detect_recover_l()
+    tiers = {r: (Tier.BURST if t == Tier.SECDED else t)
+             for r, t in base.tiers.items()}
+    return HRMPolicy("burst_dr_l", tiers, default=Tier.NONE,
+                     error_model=ErrorModel(less_tested=True))
+
+
 DESIGN_POINTS = {
     "typical_server": typical_server,
     "consumer_pc": consumer_pc,
     "detect_recover": detect_recover,
     "less_tested": less_tested,
     "detect_recover_l": detect_recover_l,
+    "dected_server": dected_server,
+    "burst_dr_l": burst_dr_l,
 }

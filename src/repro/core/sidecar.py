@@ -13,9 +13,10 @@ leaf into an HRM region, and materializes that region's tier:
   NONE      -> nothing stored
   PARITY_R  -> packed parity bits (1.6% of leaf bytes)
   SECDED    -> ECC byte per 64-bit word (12.5%)
-  DECTED    -> two SEC-DED codes over the 32-bit half-words (25% measured;
-               corrects any 2 flipped bits that land in different halves —
-               the framework-level stand-in for Table 1's DEC-TED)
+  BURST     -> 14-bit interleaved SEC-DAEC code per word, stored uint16
+               (25% stored; corrects singles + any adjacent double)
+  DECTED    -> 15-bit shortened-BCH(79,64)+parity code per word, stored
+               uint16 (25% stored; corrects any 2 bits, detects any 3)
   MIRROR    -> full replica + parity on the primary (~101.6%)
 
 ``scrub(state, sidecar, policy, root)`` re-verifies every protected leaf
@@ -56,13 +57,6 @@ def leaf_index(state, root: str = "params") -> Dict[str, Dict[str, Any]]:
     return out
 
 
-def _halves(x):
-    """Split a tensor's packed words into two 32-bit-half pseudo tensors."""
-    p = ops.pack_words(x)
-    zeros = jnp.zeros_like(p.lo)
-    return p, zeros
-
-
 def build_sidecar(state, policy: HRMPolicy, root: str = "params"
                   ) -> PathEntries:
     sc: PathEntries = {}
@@ -76,15 +70,9 @@ def build_sidecar(state, policy: HRMPolicy, root: str = "params"
         elif tier == Tier.SECDED:
             sc[pstr] = {"tier": tier.value, "ecc": ops.secded_encode(leaf)}
         elif tier == Tier.DECTED:
-            p, zeros = _halves(leaf)
-            from repro.kernels.secded import secded_encode_words
-            ecc_lo = secded_encode_words(p.lo, zeros,
-                                         interpret=ops.INTERPRET)
-            ecc_hi = secded_encode_words(p.hi, zeros,
-                                         interpret=ops.INTERPRET)
-            sc[pstr] = {"tier": tier.value,
-                        "ecc_lo": ecc_lo.astype(jnp.uint8),
-                        "ecc_hi": ecc_hi.astype(jnp.uint8)}
+            sc[pstr] = {"tier": tier.value, "ecc": ops.dected_encode(leaf)}
+        elif tier == Tier.BURST:
+            sc[pstr] = {"tier": tier.value, "ecc": ops.burst_encode(leaf)}
         elif tier == Tier.MIRROR:
             sc[pstr] = {"tier": tier.value, "copy": leaf,
                         "par": ops.parity_encode(leaf)}
@@ -150,22 +138,17 @@ def scrub(state, sidecar: PathEntries, policy: HRMPolicy,
             report.corrected[pstr] = corr
             report.detected_uncorrectable[pstr] = unc
         elif tier == Tier.DECTED:
-            from repro.kernels.secded import secded_scrub_words
-            p = ops.pack_words(leaf)
-            zeros = jnp.zeros_like(p.lo)
-            lo2, _, ecc_lo2, c1, u1 = secded_scrub_words(
-                p.lo, zeros, entry["ecc_lo"].astype(jnp.uint32),
-                interpret=ops.INTERPRET)
-            hi2, _, ecc_hi2, c2, u2 = secded_scrub_words(
-                p.hi, zeros, entry["ecc_hi"].astype(jnp.uint32),
-                interpret=ops.INTERPRET)
-            new_leaves[pstr] = ops.unpack_words(
-                ops.Packed(lo2, hi2), leaf.shape, leaf.dtype)
-            new_sc[pstr] = {"tier": entry["tier"],
-                            "ecc_lo": ecc_lo2.astype(jnp.uint8),
-                            "ecc_hi": ecc_hi2.astype(jnp.uint8)}
-            report.corrected[pstr] = jnp.sum(c1) + jnp.sum(c2)
-            report.detected_uncorrectable[pstr] = jnp.sum(u1) + jnp.sum(u2)
+            leaf2, ecc2, corr, unc = ops.dected_scrub(leaf, entry["ecc"])
+            new_leaves[pstr] = leaf2
+            new_sc[pstr] = {"tier": entry["tier"], "ecc": ecc2}
+            report.corrected[pstr] = corr
+            report.detected_uncorrectable[pstr] = unc
+        elif tier == Tier.BURST:
+            leaf2, ecc2, corr, unc = ops.burst_scrub(leaf, entry["ecc"])
+            new_leaves[pstr] = leaf2
+            new_sc[pstr] = {"tier": entry["tier"], "ecc": ecc2}
+            report.corrected[pstr] = corr
+            report.detected_uncorrectable[pstr] = unc
         elif tier == Tier.MIRROR:
             mask = ops.parity_error_words(leaf, entry["par"])
             leaf2 = ops.restore_words(leaf, entry["copy"], mask)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import bitflip as _bitflip
+from repro.kernels import burst as _burst
+from repro.kernels import dected as _dected
 from repro.kernels import parity as _parity
 from repro.kernels import secded as _secded
 
@@ -134,6 +136,58 @@ def secded_scrub(x: jax.Array, ecc: jax.Array
         interpret=INTERPRET)
     x2 = unpack_words(Packed(lo, hi), x.shape, x.dtype)
     return x2, ecc2.astype(jnp.uint8), jnp.sum(corr), jnp.sum(unc)
+
+
+# --------------------------------------------------------------- DEC-TED
+def dected_encode(x: jax.Array) -> jax.Array:
+    """DEC-TED sidecar for tensor ``x``: (M, LANES) uint16 (25% capacity,
+    15 valid code bits per 64-bit word)."""
+    p = pack_words(x)
+    ecc = _dected.dected_encode_words(p.lo, p.hi,
+                                      block_rows=_bm(p.lo.shape[0]),
+                                      interpret=INTERPRET)
+    return ecc.astype(jnp.uint16)
+
+
+def dected_scrub(x: jax.Array, ecc: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scrub tensor against its DEC-TED sidecar.
+
+    Returns (corrected tensor, corrected ecc (uint16), n_corrected,
+    n_uncorrectable). Corrects all 1/2-bit word errors, detects 3-bit.
+    """
+    p = pack_words(x)
+    lo, hi, ecc2, corr, unc = _dected.dected_scrub_words(
+        p.lo, p.hi, ecc.astype(jnp.uint32), block_rows=_bm(p.lo.shape[0]),
+        interpret=INTERPRET)
+    x2 = unpack_words(Packed(lo, hi), x.shape, x.dtype)
+    return x2, ecc2.astype(jnp.uint16), jnp.sum(corr), jnp.sum(unc)
+
+
+# ------------------------------------------------------------ burst/DAEC
+def burst_encode(x: jax.Array) -> jax.Array:
+    """SEC-DAEC sidecar for tensor ``x``: (M, LANES) uint16 (25% capacity,
+    14 valid code bits per 64-bit word)."""
+    p = pack_words(x)
+    ecc = _burst.burst_encode_words(p.lo, p.hi,
+                                    block_rows=_bm(p.lo.shape[0]),
+                                    interpret=INTERPRET)
+    return ecc.astype(jnp.uint16)
+
+
+def burst_scrub(x: jax.Array, ecc: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scrub tensor against its SEC-DAEC sidecar.
+
+    Returns (corrected tensor, corrected ecc (uint16), n_corrected,
+    n_uncorrectable). Corrects singles and adjacent doubles.
+    """
+    p = pack_words(x)
+    lo, hi, ecc2, corr, unc = _burst.burst_scrub_words(
+        p.lo, p.hi, ecc.astype(jnp.uint32), block_rows=_bm(p.lo.shape[0]),
+        interpret=INTERPRET)
+    x2 = unpack_words(Packed(lo, hi), x.shape, x.dtype)
+    return x2, ecc2.astype(jnp.uint16), jnp.sum(corr), jnp.sum(unc)
 
 
 # ---------------------------------------------------------------- parity

@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import bch as _bch
+from repro.kernels import burst as _burst
 from repro.kernels import hsiao
+from repro.kernels.dected import DECTED_CODE
 
 _POP = jax.lax.population_count
 
@@ -64,6 +67,39 @@ def secded_scrub_ref(lo, hi, ecc):
     ecc2 = jnp.where(uncorrectable, ecc, secded_encode_ref(lo2, hi2))
     corrected = (synd != 0) & matched
     return lo2, hi2, ecc2, corrected, uncorrectable
+
+
+def bch_encode_ref(code, lo, hi) -> jax.Array:
+    """Eager shortened-BCH encode: r check bits per word, uint32 out."""
+    return _bch.encode_block(code, lo, hi)
+
+
+def bch_scrub_ref(code, lo, hi, ecc):
+    """Eager shortened-BCH syndrome decode + correct.
+
+    Returns (lo', hi', ecc', corrected_mask, uncorrectable_mask).
+    """
+    return _bch.decode_block(code, lo, hi, ecc)
+
+
+def dected_encode_ref(lo, hi) -> jax.Array:
+    """DEC-TED(79,64) encode: 15 check bits per word, uint32 out."""
+    return _bch.encode_block(DECTED_CODE, lo, hi)
+
+
+def dected_scrub_ref(lo, hi, ecc):
+    """DEC-TED decode: corrects all 1/2-bit patterns, detects 3-bit."""
+    return _bch.decode_block(DECTED_CODE, lo, hi, ecc)
+
+
+def burst_encode_ref(lo, hi) -> jax.Array:
+    """Interleaved SEC-DAEC encode: 14 check bits per word, uint32 out."""
+    return _burst.encode_block(lo, hi)
+
+
+def burst_scrub_ref(lo, hi, ecc):
+    """SEC-DAEC decode: corrects singles + adjacent data doubles."""
+    return _burst.decode_block(lo, hi, ecc)
 
 
 def parity_encode_ref(lo, hi) -> jax.Array:

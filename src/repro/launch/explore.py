@@ -2,12 +2,19 @@
 pricing HRM over every workload the repo serves.
 
 Sweeps {websearch, kvstore, graph} x {typical_server, consumer_pc,
-detect_recover, less_tested, detect_recover_l, autopolicy} and emits one
-Fig.5-style table per workload: relative memory cost (the capacity
-premium), memory/server savings, availability, crashes and incorrect
-responses per month — driving the measured-mode cost model
+detect_recover, less_tested, detect_recover_l, dected_server, burst_dr_l,
+autopolicy} and emits one Fig.5-style table per workload: relative memory
+cost (the capacity premium), memory/server savings, availability, crashes
+and incorrect responses per month — driving the measured-mode cost model
 (``core.costmodel``), the availability model (``core.availability``) and
 the policy auto-tuner (``core.autopolicy``) from one place.
+
+The strong-ECC design points (``dected_server``, ``burst_dr_l``) do not
+reuse the calibrated ECC outcome constants: their per-tier outcome rates
+are *measured* by driving the DEC-TED / BURST Pallas kernels over
+injected single / random-double / adjacent-burst strikes
+(``core.eccmeasure``), and each table row is tagged with its ECC-outcome
+source (``ecc_src``: measured vs calibrated).
 
 Vulnerability profiles per workload default to the calibrated constants
 below (provenance: docs/DESIGN.md §8); ``--measure`` replaces them with a
@@ -26,21 +33,37 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.autopolicy import tune_policy, vuln_from_campaign
-from repro.core.availability import (WEBSEARCH_VULN, VulnProfile,
-                                     evaluate_availability,
+from repro.core.availability import (MULTI_BIT_FRACTION, WEBSEARCH_VULN,
+                                     VulnProfile, evaluate_availability,
                                      paper_design_availability)
 from repro.core.costmodel import (MEMORY_COST_SHARE, WEBSEARCH,
                                   RegionProfile, paper_design_costs,
                                   policy_cost_saving, region_fractions)
+from repro.core.eccmeasure import measured_tier_rates
+from repro.core.errormodel import DEFAULT_ADJACENT_FRACTION
 from repro.core.policy import DESIGN_POINTS
+from repro.core.tiers import Tier
 
 WORKLOADS = ("websearch", "kvstore", "graph")
 DESIGNS = ("typical_server", "consumer_pc", "detect_recover",
-           "less_tested", "detect_recover_l", "autopolicy")
+           "less_tested", "detect_recover_l", "dected_server",
+           "burst_dr_l", "autopolicy")
 # design points with a software recovery layer (Table 2); on the others an
 # uncorrectable ECC error is a machine-check crash (the auto-tuned point
 # always assumes the software layer and is handled separately)
-_SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc"}
+_SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc",
+                      "burst_dr_l"}
+# design points whose ECC outcomes are measured through the real kernels
+MEASURED_ECC_DESIGNS = {"dected_server", "burst_dr_l"}
+
+
+def _measured_rates():
+    """Per-tier outcome rates for the strong-ECC tiers, measured through
+    the DEC-TED / BURST kernels under the availability model's incident
+    mix (lru-cached downstream, so the kernels run once per process)."""
+    return measured_tier_rates((Tier.DECTED, Tier.BURST),
+                               MULTI_BIT_FRACTION,
+                               DEFAULT_ADJACENT_FRACTION)
 
 # Calibrated per-region vulnerability (docs/DESIGN.md §8). The kv-store
 # mirrors the paper's Memcached: a huge tolerant value table, thin
@@ -73,11 +96,12 @@ class ExploreRow:
     crashes_per_month: float
     incorrect_per_million: float
     recoveries_per_month: float
+    ecc_source: str = "calibrated"
 
     _FMT = ("{design:18s} {memory_cost_rel:8.3f} {memory_saving:9.2%} "
             "{server_saving:9.2%} {availability:9.4%} "
             "{crashes_per_month:9.2f} {incorrect_per_million:6.2f} "
-            "{recoveries_per_month:9.1f}")
+            "{recoveries_per_month:9.1f} {ecc_source:>10s}")
 
     def row(self) -> str:
         return self._FMT.format(**vars(self))
@@ -203,9 +227,14 @@ def explore_workload(w: Workload, designs: List[str], *,
                      incorrect_target: float = 12.0) -> List[ExploreRow]:
     """One Fig.5-style row per design point on workload ``w``."""
     rows: List[ExploreRow] = []
+    need_measured = any(n in MEASURED_ECC_DESIGNS for n in designs)
+    rates = _measured_rates() if need_measured else None
     paper_costs = paper_design_costs() if w.paper else None
-    paper_avail = paper_design_availability() if w.paper else None
+    paper_avail = (paper_design_availability(tier_rates=rates)
+                   if w.paper else None)
     for name in designs:
+        source = "measured" if name in MEASURED_ECC_DESIGNS \
+            else "calibrated"
         if name == "autopolicy":
             rows.append(_auto_row(w, availability_target, incorrect_target))
             continue
@@ -214,7 +243,7 @@ def explore_workload(w: Workload, designs: List[str], *,
             rows.append(ExploreRow(
                 w.name, name, c.memory_cost_rel, c.memory_saving,
                 c.server_saving, a.availability, a.crashes_per_month,
-                a.incorrect_per_million, a.recoveries_per_month))
+                a.incorrect_per_million, a.recoveries_per_month, source))
             continue
         policy = DESIGN_POINTS[name]()
         cost = policy_cost_saving(policy, w.profile)
@@ -222,17 +251,18 @@ def explore_workload(w: Workload, designs: List[str], *,
         a = evaluate_availability(
             name, tiers, w.profile, w.vuln,
             less_tested=policy.error_model.less_tested,
-            software_response=name in _SOFTWARE_RESPONSE)
+            software_response=name in _SOFTWARE_RESPONSE,
+            tier_rates=rates if name in MEASURED_ECC_DESIGNS else None)
         rows.append(ExploreRow(
             w.name, name, cost.memory_cost_rel, cost.memory_saving,
             cost.server_saving, a.availability, a.crashes_per_month,
-            a.incorrect_per_million, a.recoveries_per_month))
+            a.incorrect_per_million, a.recoveries_per_month, source))
     return rows
 
 
 _HEADER = (f"{'design':18s} {'mem_cost':>8s} {'mem_save':>9s} "
            f"{'srv_save':>9s} {'avail':>9s} {'crash/mo':>9s} "
-           f"{'bad/M':>6s} {'recov/mo':>9s}")
+           f"{'bad/M':>6s} {'recov/mo':>9s} {'ecc_src':>10s}")
 
 
 def format_table(w: Workload, rows: List[ExploreRow]) -> str:

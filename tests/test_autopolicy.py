@@ -40,10 +40,26 @@ def test_autopolicy_tightens_with_target():
 
 
 def test_autopolicy_infeasible_raises():
+    # a target beyond perfection is infeasible even for all-DEC-TED
     with pytest.raises(ValueError):
         tune_policy(WEBSEARCH, WEBSEARCH_VULN,
                     availability_target=1.0,
-                    incorrect_target_per_million=0.0)
+                    incorrect_target_per_million=-1.0)
+
+
+def test_autopolicy_escalates_to_strong_tiers():
+    """A perfect target is only reachable via the strong-ECC tiers (Par+R
+    recoveries cost downtime; SEC-DED leaks double-bit events): the tuner
+    must escalate past SEC-DED instead of raising."""
+    res = tune_policy(WEBSEARCH, WEBSEARCH_VULN,
+                      availability_target=1.0,
+                      incorrect_target_per_million=0.0)
+    assert res.availability == 1.0
+    assert res.incorrect_per_million == 0.0
+    assert all(t in (Tier.BURST, Tier.DECTED)
+               for t in res.policy.tiers.values())
+    # and it picks the cheaper of the two strong codes (14 vs 15 bits)
+    assert Tier.DECTED not in res.policy.tiers.values()
 
 
 def test_vuln_from_measured_campaign():

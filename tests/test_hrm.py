@@ -51,7 +51,13 @@ def test_fig5_availability_numbers_match_paper():
 def test_design_points_all_defined():
     assert set(DESIGN_POINTS) == {"typical_server", "consumer_pc",
                                   "detect_recover", "less_tested",
-                                  "detect_recover_l"}
+                                  "detect_recover_l", "dected_server",
+                                  "burst_dr_l"}
+    # the strong-ECC extensions use the true multi-bit codes everywhere
+    # they protect
+    assert set(DESIGN_POINTS["dected_server"]().tiers.values()) == {
+        Tier.DECTED}
+    assert Tier.BURST in DESIGN_POINTS["burst_dr_l"]().tiers.values()
 
 
 # ------------------------------------------------------- sidecar overheads

@@ -8,11 +8,20 @@ incorrect-response rate, and measured availability against the paper's
 99.90% single-server bar. Writes ``BENCH_serve_slo.json``.
 
   PYTHONPATH=src python -m benchmarks.run serve_slo
+
+Standalone, the benchmark can replay a *recorded* server-month instead of
+the Poisson storm — the trace's repeat-offender hard faults and adjacent
+bursts strike the bound params/KV words deterministically, so two runs
+print identical availability and incorrect-rate numbers:
+
+  PYTHONPATH=src python -m repro.core.tracegen --out month.npz
+  PYTHONPATH=src python -m benchmarks.serve_slo --trace month.npz
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List
+from typing import List, Optional
 
 from benchmarks.common import Row
 
@@ -21,7 +30,7 @@ N_REQUESTS = 40
 STORM_ERRORS = 540          # one server-month budget (availability.py)
 
 
-def run() -> List[Row]:
+def run(trace_path: Optional[str] = None) -> List[Row]:
     import jax
 
     from repro.configs import get_tiny
@@ -35,6 +44,10 @@ def run() -> List[Row]:
     tc = TrafficConfig(n_requests=N_REQUESTS, rate=16.0, process="bursty",
                        seed=7)
     trace = generate_trace(tc, cfg.vocab_size)
+    error_trace = None
+    if trace_path is not None:
+        from repro.core.trace import ErrorTrace
+        error_trace = ErrorTrace.load(trace_path)
 
     def make_engine():
         return OnlineEngine(
@@ -45,11 +58,18 @@ def run() -> List[Row]:
 
     t0 = time.perf_counter()
     _, golden = make_engine().run(trace, storm_errors=0)
-    report, observed = make_engine().run(trace, storm_errors=STORM_ERRORS)
+    if error_trace is not None:
+        report, observed = make_engine().run(trace,
+                                             error_trace=error_trace)
+    else:
+        report, observed = make_engine().run(trace,
+                                             storm_errors=STORM_ERRORS)
     wall_us = (time.perf_counter() - t0) * 1e6
     report.incorrect_rate = incorrect_rate(golden, observed)
     report.write_json(OUT_JSON)
 
+    storm_src = f"trace:{trace_path}" if trace_path else \
+        f"poisson:{STORM_ERRORS}"
     per_req = wall_us / max(report.completed, 1)
     return [
         Row("serve_slo/throughput", per_req,
@@ -63,4 +83,34 @@ def run() -> List[Row]:
             f"{'PASS' if report.availability >= 0.9990 else 'FAIL'}@99.90%"),
         Row("serve_slo/incorrect_rate", 0.0,
             f"{report.incorrect_rate:.4f}"),
+        Row("serve_slo/storm_source", 0.0, storm_src),
     ]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Serving SLO benchmark: golden pass + error storm "
+                    "(Poisson budget, or a recorded trace with --trace).")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a recorded error trace (.npz from "
+                         "repro.core.tracegen) instead of the Poisson storm")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate wiring (and the trace file, if given) "
+                         "without running the engine")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        if args.trace:
+            from repro.core.trace import ErrorTrace
+            tr = ErrorTrace.load(args.trace)
+            print(f"trace ok: {tr.summary()}")
+        print(f"plan: {N_REQUESTS} requests, storm="
+              f"{'trace' if args.trace else f'poisson:{STORM_ERRORS}'}")
+        print("SERVE_SLO DRY-RUN OK")
+        return 0
+    for row in run(trace_path=args.trace):
+        print(row.csv())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

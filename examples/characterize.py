@@ -3,26 +3,41 @@ LM as the web-search stand-in, the Memcached-analogue kv-store, and
 PageRank graph mining), printing the Fig.3/Fig.4-style breakdown.
 
   PYTHONPATH=src python examples/characterize.py
+
+``--trace`` replays a recorded error stream (``repro.core.tracegen``)
+instead of iid sampling: one trial per trace event, in arrival order,
+with the trace deciding strike address, burst width, and hard/soft kind.
+Bit-deterministic — the same trace prints the same table every run:
+
+  PYTHONPATH=src python -m repro.core.tracegen --out month.npz
+  PYTHONPATH=src python examples/characterize.py --trace month.npz
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_tiny
 from repro.configs.base import ShapeSpec
-from repro.core import lm_eval_fn, run_campaign
+from repro.core import lm_eval_fn, run_campaign, run_trace_campaign
 from repro.data.synthetic import make_batch
 from repro.models import forward, init_params
 
 
-def lm_campaign():
+def _lm_parts():
     cfg = get_tiny("llama3-8b")
     params = init_params(jax.random.PRNGKey(0), cfg)
     batch = make_batch(cfg, ShapeSpec("c", 32, 2, "train"))
     ev = jax.jit(lambda p: lm_eval_fn(cfg, batch, forward)(p)[0])
-    return run_campaign(lambda p: (ev(p), p), params, n_trials=30, seed=3)
+    return params, (lambda p: (ev(p), p))
 
 
-def kvstore_campaign():
+def lm_campaign():
+    params, ev = _lm_parts()
+    return run_campaign(ev, params, n_trials=30, seed=3)
+
+
+def _kv_parts():
     """Memcached analogue: value table + read path; queries are lookups."""
     cfg = get_tiny("kvstore-demo")
     params = init_params(jax.random.PRNGKey(1), cfg)
@@ -34,10 +49,15 @@ def kvstore_campaign():
         toks = jnp.argmax(logits, axis=-1)
         ok = jnp.isfinite(logits.astype(jnp.float32)).all()
         return jnp.where(ok, toks, -1), p
+    return params, ev
+
+
+def kvstore_campaign():
+    params, ev = _kv_parts()
     return run_campaign(ev, params, n_trials=30, seed=4)
 
 
-def graph_campaign():
+def _graph_parts():
     """PageRank on a power-law graph: queries are top-k rankings; the
     iterate masks errors through convergence, the topology does not."""
     from repro.core import HRMPolicy, MemoryDomain
@@ -45,8 +65,12 @@ def graph_campaign():
     g = powerlaw_graph(256, avg_degree=8, seed=5)
     domain = MemoryDomain.protect({"graph": graph_state(g)},
                                   HRMPolicy("campaign/graph", {}))
-    return run_campaign(pagerank_eval_fn(g.n, iters=12), domain,
-                        n_trials=20, seed=6)
+    return domain, pagerank_eval_fn(g.n, iters=12)
+
+
+def graph_campaign():
+    domain, ev = _graph_parts()
+    return run_campaign(ev, domain, n_trials=20, seed=6)
 
 
 def show(name, res):
@@ -60,7 +84,32 @@ def show(name, res):
           f"incorrect={res.incorrect_prob():.3f}")
 
 
-if __name__ == "__main__":
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Fig.2 error-emulation campaigns (iid, or replaying a "
+                    "recorded trace with --trace).")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a recorded error trace (.npz) instead of "
+                         "iid strike sampling")
+    ap.add_argument("--max-events", type=int, default=None,
+                    help="cap the number of replayed trace events per app")
+    args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.core import ErrorTrace
+        trace = ErrorTrace.load(args.trace)
+        print(f"replaying {trace.summary()}")
+        builders = (("dense LM (llama3-8b tiny)", _lm_parts),
+                    ("kv-store (Memcached analogue)", _kv_parts),
+                    ("graph mining (PageRank, power-law)", _graph_parts))
+        for name, build in builders:
+            state, ev = build()
+            res = run_trace_campaign(ev, state, trace,
+                                     max_events=args.max_events)
+            show(name, res)
+        print("\nCHARACTERIZE TRACE OK")
+        return 0
+
     lm = lm_campaign()
     kv = kvstore_campaign()
     gr = graph_campaign()
@@ -72,3 +121,8 @@ if __name__ == "__main__":
           round(max(lm.incorrect_prob(), 1e-3)
                 / max(kv.incorrect_prob(), 1e-3), 2))
     print("CHARACTERIZE OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

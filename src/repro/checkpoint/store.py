@@ -1,10 +1,29 @@
 """Checkpoint store: atomic pytree snapshots + the Par+R clean-copy source.
 
 Format: one directory per step holding a single ``data.npz`` of raw-byte
-(uint8) views plus a ``meta.json`` of {path: (shape, dtype)} — avoids any
-dependence on numpy's support for bf16 et al. Writes are atomic
-(tmp dir + rename) so a mid-write failure never corrupts the latest
-checkpoint — the restart path's invariant.
+(uint8) views plus a ``meta.json`` of {path: (shape, dtype, crc32)} and a
+whole-snapshot manifest hash — avoids any dependence on numpy's support
+for bf16 et al. Writes are atomic (tmp dir + rename) so a mid-write
+failure never corrupts the latest checkpoint — the restart path's
+invariant; stale ``.tmp_*`` staging dirs from crashed writers are swept
+on construction.
+
+Integrity (the checkpoint is the recovery path's root of trust, so it is
+held to a higher standard than the memory it repairs):
+
+* at ``save``, every leaf buffer is checksummed (CRC32) and a SHA-256
+  manifest binds the full set of (path, shape, dtype, crc) records; the
+  staging buffers themselves sit in a cheap Par+R ``MemoryDomain`` and
+  are scrubbed immediately before hitting disk, so a bit flipped between
+  serialization and write is detected rather than burned into the
+  snapshot;
+* at ``load`` / ``clean_copy`` every byte is re-checksummed. A snapshot
+  that fails (truncated zip, flipped bit, tampered meta) raises
+  ``SnapshotCorruptError`` and the store automatically falls back to the
+  newest *older* snapshot that verifies; when none does, it raises
+  ``core.recovery.RestartRequired`` — corrupted bytes never reach a
+  domain payload. Legacy snapshots without CRCs still load (verification
+  is vacuous).
 
 ``clean_copy(path)`` serves single leaves to ``core.recovery`` (the
 software-correction response reloads only the damaged region, the paper's
@@ -12,17 +31,27 @@ software-correction response reloads only the damaged region, the paper's
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import tempfile
 import threading
+import zlib
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.recovery import RestartRequired
+
+MANIFEST_KEY = "__manifest__"
+
+
+class SnapshotCorruptError(RuntimeError):
+    """A snapshot failed CRC/manifest verification (or is unreadable)."""
 
 
 def _flatten(state) -> Dict[str, Any]:
@@ -34,12 +63,54 @@ def _flatten(state) -> Dict[str, Any]:
     return flat
 
 
+def _manifest_sha(meta_leaves: Dict[str, Dict]) -> str:
+    """SHA-256 binding every (path, shape, dtype, crc32) record."""
+    h = hashlib.sha256()
+    for k in sorted(meta_leaves):
+        m = meta_leaves[k]
+        h.update(f"{k}:{m['shape']}:{m['dtype']}:{m.get('crc32', '')}\n"
+                 .encode())
+    return h.hexdigest()
+
+
+def _scrub_staged(buffers: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Hold the staging buffers in a cheap Par+R ``MemoryDomain`` and scrub
+    once immediately before the write hits disk. A bit flipped in host
+    memory between serialization and write is *detected* here (and healed
+    from the just-computed source bytes) instead of being checksummed
+    into the snapshot as truth."""
+    from repro.core.domain import MemoryDomain
+    from repro.core.policy import HRMPolicy
+    from repro.core.tiers import Tier
+
+    staged = {"ckpt": {k: jnp.asarray(v) for k, v in buffers.items()}}
+    dom = MemoryDomain.protect(
+        staged, HRMPolicy("ckpt_staging", {}, default=Tier.PARITY_R,
+                          scrub_interval=1))
+    dom, rep = dom.scrub()
+    needs = rep.needs_recovery()
+    if needs:
+        dom, _ = dom.recover(
+            rep, clean_copy=lambda p: jnp.asarray(buffers[p.split("/")[-1]]),
+            needs=needs)
+    out = dom.payload["ckpt"]
+    return {k: np.asarray(out[k]) for k in buffers}
+
+
 class CheckpointStore:
     def __init__(self, directory, keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._lock = threading.Lock()
+        self.last_loaded_step: Optional[int] = None
+        self._sweep_tmp()
+
+    def _sweep_tmp(self) -> None:
+        """Remove staging dirs left behind by crashed mid-write savers —
+        they are invisible to ``steps()`` but leak disk forever."""
+        for p in self.dir.glob(".tmp_*"):
+            shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state) -> Path:
@@ -48,10 +119,15 @@ class CheckpointStore:
             meta, buffers = {}, {}
             for k, leaf in flat.items():
                 arr = np.asarray(jax.device_get(leaf))
+                buf = np.frombuffer(arr.tobytes(), dtype=np.uint8)
                 meta[k] = {"shape": list(arr.shape),
-                           "dtype": str(arr.dtype)}
-                buffers[k.replace("/", "|")] = \
-                    np.frombuffer(arr.tobytes(), dtype=np.uint8)
+                           "dtype": str(arr.dtype),
+                           "crc32": zlib.crc32(buf.tobytes())}
+                buffers[k.replace("/", "|")] = buf
+            buffers = _scrub_staged(buffers)
+            meta[MANIFEST_KEY] = {"sha256": _manifest_sha(
+                {k: m for k, m in meta.items() if k != MANIFEST_KEY}),
+                "step": step}
             tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
             np.savez(tmp / "data.npz", **buffers)
             (tmp / "meta.json").write_text(json.dumps(meta))
@@ -83,14 +159,62 @@ class CheckpointStore:
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
 
-    def _read(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+    def _read(self, step: int, *, verify: bool = True
+              ) -> Tuple[Dict[str, np.ndarray], Dict]:
         d = self.dir / f"step_{step:08d}"
-        meta = json.loads((d / "meta.json").read_text())
-        data = np.load(d / "data.npz")
+        try:
+            meta = json.loads((d / "meta.json").read_text())
+            with np.load(d / "data.npz") as z:
+                data = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise SnapshotCorruptError(
+                f"snapshot step {step} unreadable: {e}") from e
+        manifest = meta.pop(MANIFEST_KEY, None)
+        if verify:
+            self._verify(step, data, meta, manifest)
         return data, meta
 
-    def load_flat(self, step: int) -> Dict[str, np.ndarray]:
-        data, meta = self._read(step)
+    @staticmethod
+    def _verify(step: int, data: Dict[str, np.ndarray], meta: Dict,
+                manifest: Optional[Dict]) -> None:
+        if manifest is not None:
+            if manifest.get("sha256") != _manifest_sha(meta):
+                raise SnapshotCorruptError(
+                    f"snapshot step {step}: manifest hash mismatch")
+        for k, m in meta.items():
+            key = k.replace("/", "|")
+            if key not in data:
+                raise SnapshotCorruptError(
+                    f"snapshot step {step}: missing buffer {k!r}")
+            crc = m.get("crc32")
+            if crc is None:        # legacy snapshot without checksums
+                continue
+            if zlib.crc32(data[key].tobytes()) != crc:
+                raise SnapshotCorruptError(
+                    f"snapshot step {step}: CRC mismatch on {k!r}")
+
+    def verifies(self, step: int) -> bool:
+        """True iff ``step`` exists and passes full verification."""
+        try:
+            self._read(step, verify=True)
+            return True
+        except SnapshotCorruptError:
+            return False
+
+    def _fallback_step(self, bad_step: int) -> int:
+        """Newest older snapshot that verifies; RestartRequired if none."""
+        for s in reversed(self.steps()):
+            if s >= bad_step:
+                continue
+            if self.verifies(s):
+                return s
+        raise RestartRequired(
+            f"no checkpoint verifies at or below step {bad_step}: "
+            f"cold restart required")
+
+    def load_flat(self, step: int, *, verify: bool = True
+                  ) -> Dict[str, np.ndarray]:
+        data, meta = self._read(step, verify=verify)
         out = {}
         for k, m in meta.items():
             raw = data[k.replace("/", "|")]
@@ -99,10 +223,23 @@ class CheckpointStore:
             out[k] = arr.reshape(m["shape"])
         return out
 
-    def load(self, step: int, like_state, shardings=None):
+    def load(self, step: int, like_state, shardings=None, *,
+             verify: bool = True, fallback: bool = True):
         """Restore into the structure of ``like_state`` (reshards if
-        ``shardings`` pytree given — the elastic-rescale path)."""
-        flat = self.load_flat(step)
+        ``shardings`` pytree given — the elastic-rescale path).
+
+        With ``verify``, a snapshot failing CRC/manifest checks is
+        refused; ``fallback`` then retries the newest older verifying
+        snapshot (``last_loaded_step`` records which one actually
+        loaded), raising ``RestartRequired`` when none survives."""
+        try:
+            flat = self.load_flat(step, verify=verify)
+        except SnapshotCorruptError:
+            if not fallback:
+                raise
+            step = self._fallback_step(step)
+            flat = self.load_flat(step, verify=verify)
+        self.last_loaded_step = step
         flat_like = _flatten(like_state)
         leaves_by_key = {}
         for k, tmpl in flat_like.items():
@@ -125,12 +262,24 @@ class CheckpointStore:
 
     # ------------------------------------------------- Par+R clean copy
     def clean_copy_fn(self, step: Optional[int] = None):
-        """Returns path -> leaf loader bound to one checkpoint step."""
+        """Returns path -> leaf loader bound to one checkpoint step.
+
+        Every serve re-verifies the snapshot's checksums; a corrupted
+        snapshot is refused and the loader silently falls back to the
+        newest older verifying one — the recovery path never hands
+        corrupted bytes to a ``MemoryDomain``. ``RestartRequired``
+        propagates when no snapshot verifies."""
         step = self.latest_step() if step is None else step
         assert step is not None, "no checkpoint available for recovery"
 
         def clean_copy(path: str):
-            flat = self.load_flat(step)
+            s = step
+            try:
+                flat = self.load_flat(s, verify=True)
+            except SnapshotCorruptError:
+                s = self._fallback_step(s)
+                flat = self.load_flat(s, verify=True)
+            self.last_loaded_step = s
             # recovery paths are relative to the wrapped root (params)
             for cand in (path, f"params/{path}"):
                 if cand in flat:

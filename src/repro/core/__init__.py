@@ -32,10 +32,10 @@ from repro.core.domain import (  # noqa: F401
 )
 from repro.core.availability import (  # noqa: F401
     AvailabilityResult, VulnProfile, WEBSEARCH_VULN, evaluate_availability,
-    paper_design_availability,
+    paper_design_availability, replay_availability,
 )
 from repro.core.characterize import (  # noqa: F401
-    CampaignResult, lm_eval_fn, run_campaign,
+    CampaignResult, lm_eval_fn, run_campaign, run_trace_campaign,
 )
 from repro.core.costmodel import (  # noqa: F401
     DesignPointCost, RegionProfile, WEBSEARCH, paper_design_costs,
@@ -53,7 +53,7 @@ from repro.core.injection import Injector  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     DESIGN_POINTS, HRMPolicy, REGIONS, burst_dr_l, classify_path,
     consumer_pc, detect_recover, detect_recover_l, dected_server,
-    less_tested, typical_server,
+    less_tested, mirror_dr_l, typical_server,
 )
 from repro.core.recovery import (  # noqa: F401
     RecoveryManager, Response, RestartRequired, RetirementMap,
@@ -63,6 +63,12 @@ from repro.core.sidecar import (  # noqa: F401
     ScrubReport, build_sidecar, scrub, sidecar_bytes, state_bytes,
 )
 from repro.core.taxonomy import Outcome, OutcomeStats  # noqa: F401
+from repro.core.trace import (  # noqa: F401
+    BoundStrike, ErrorTrace, TraceReplayer, bind_trace,
+)
+from repro.core.tracegen import (  # noqa: F401
+    TraceGenConfig, generate_error_trace,
+)
 from repro.core.tiers import (  # noqa: F401
     TIER_TABLE, Tier, capacity_overhead, stored_overhead,
 )

@@ -31,6 +31,7 @@ from repro.core.domain import MemoryDomain
 from repro.core.errormodel import InjectionPlan
 from repro.core.policy import HRMPolicy
 from repro.core.taxonomy import Outcome, OutcomeStats
+from repro.core.trace import ErrorTrace, TraceReplayer
 from repro.kernels.ops import LANES
 
 
@@ -81,6 +82,64 @@ def classify_trial(golden_out: np.ndarray, out, clean_leaf, final_leaf,
     return Outcome.MASKED_LOGIC
 
 
+_OUTCOME_ORDER = [Outcome.MASKED_OVERWRITE, Outcome.MASKED_LOGIC,
+                  Outcome.INCORRECT, Outcome.CRASH]
+
+
+def _campaign_domain(state, root: str):
+    """The (domain, wrapped, unwrap) triple both campaign drivers share."""
+    if isinstance(state, MemoryDomain):
+        return state, False, (lambda p: p)
+    wrapped = root != "params"
+    domain = MemoryDomain.protect(
+        {root: state} if wrapped else state,
+        HRMPolicy(f"campaign/{root}", {}))
+    unwrap = (lambda p: p[root]) if wrapped else (lambda p: p)
+    return domain, wrapped, unwrap
+
+
+def _run_trial(domain: MemoryDomain, s, plan: InjectionPlan,
+               eval_fn: Callable, golden_out: np.ndarray, unwrap: Callable,
+               wrapped: bool, root: str, hard: bool,
+               hard_repeat: int) -> Outcome:
+    """One Fig.2 trial: corrupt a clean domain with ``plan``, evaluate
+    (``hard_repeat`` consecutive queries for sticky errors, worst outcome
+    wins), classify per the Fig.1 taxonomy."""
+
+    def leaf_of(tree, pos):
+        return jax.tree_util.tree_leaves(tree)[pos]
+
+    clean_leaf = domain.leaf(s.path)
+    corrupted = domain.apply_plan(s.path, plan)
+    outcome = None
+    reps = hard_repeat if hard else 1
+    for r in range(reps):
+        crashed = False
+        out, final_state = None, unwrap(corrupted.payload)
+        try:
+            out, final_state = eval_fn(unwrap(corrupted.payload))
+            out_arr = jnp.asarray(out)
+            crashed = (not _finite(out_arr.astype(jnp.float32))
+                       or bool(jnp.any(out_arr < 0)))
+        except (FloatingPointError, ZeroDivisionError, ValueError,
+                RuntimeError):
+            crashed = True
+        final_leaf = leaf_of(final_state, s.pos) \
+            if final_state is not None else clean_leaf
+        o = classify_trial(golden_out, out if out is not None else
+                           golden_out + 1, clean_leaf, final_leaf,
+                           crashed)
+        # worst outcome across repeats wins (hard errors persist)
+        if outcome is None or _OUTCOME_ORDER.index(o) > \
+                _OUTCOME_ORDER.index(outcome):
+            outcome = o
+        if hard and r + 1 < reps:
+            corrupted = domain.adopt(
+                {root: final_state} if wrapped else final_state
+            ).apply_plan(s.path, plan)
+    return outcome
+
+
 def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
                  errors_per_trial: int = 1, seed: int = 0,
                  kinds: Tuple[str, ...] = ("soft", "hard"),
@@ -101,15 +160,7 @@ def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
     already classified every leaf).
     """
     rng = np.random.default_rng(seed)
-    if isinstance(state, MemoryDomain):
-        domain, wrapped = state, False
-    else:
-        # an index-only domain: the leaf table without materialized tiers
-        wrapped = root != "params"
-        domain = MemoryDomain.protect(
-            {root: state} if wrapped else state,
-            HRMPolicy(f"campaign/{root}", {}))
-    unwrap = (lambda p: p[root]) if wrapped else (lambda p: p)
+    domain, wrapped, unwrap = _campaign_domain(state, root)
     specs = [s for s in domain.spec.protectable
              if region_filter is None or region_filter(s.region)]
     # sample leaves weighted by byte size (errors strike uniformly over bytes)
@@ -120,47 +171,49 @@ def run_campaign(eval_fn: Callable, state, *, n_trials: int = 50,
     golden_out = np.asarray(golden_out)
     result = CampaignResult()
 
-    def leaf_of(tree, pos):
-        return jax.tree_util.tree_leaves(tree)[pos]
-
     for kind in kinds:
         hard = kind == "hard"
         for t in range(n_trials):
             s = specs[rng.choice(len(specs), p=weights)]
-            clean_leaf = domain.leaf(s.path)
             # unified strike mix: DEFAULT_MULTI_BIT_FRACTION of events add
             # a second flip (half adjacent) — the §8.3 campaign mix
             plan = InjectionPlan.sample(rng, s.rows * LANES,
                                         errors_per_trial, hard)
-            corrupted = domain.apply_plan(s.path, plan)
-            outcome = None
-            reps = hard_repeat if hard else 1
-            for r in range(reps):
-                crashed = False
-                out, final_state = None, unwrap(corrupted.payload)
-                try:
-                    out, final_state = eval_fn(unwrap(corrupted.payload))
-                    out_arr = jnp.asarray(out)
-                    crashed = (not _finite(out_arr.astype(jnp.float32))
-                               or bool(jnp.any(out_arr < 0)))
-                except (FloatingPointError, ZeroDivisionError, ValueError,
-                        RuntimeError):
-                    crashed = True
-                final_leaf = leaf_of(final_state, s.pos) \
-                    if final_state is not None else clean_leaf
-                o = classify_trial(golden_out, out if out is not None else
-                                   golden_out + 1, clean_leaf, final_leaf,
-                                   crashed)
-                # worst outcome across repeats wins (hard errors persist)
-                order = [Outcome.MASKED_OVERWRITE, Outcome.MASKED_LOGIC,
-                         Outcome.INCORRECT, Outcome.CRASH]
-                if outcome is None or order.index(o) > order.index(outcome):
-                    outcome = o
-                if hard and r + 1 < reps:
-                    corrupted = domain.adopt(
-                        {root: final_state} if wrapped else final_state
-                    ).apply_plan(s.path, plan)
+            outcome = _run_trial(domain, s, plan, eval_fn, golden_out,
+                                 unwrap, wrapped, root, hard, hard_repeat)
             result.stat(s.region, kind).add(outcome)
+    return result
+
+
+def run_trace_campaign(eval_fn: Callable, state, trace: ErrorTrace, *,
+                       hard_repeat: int = 3,
+                       region_filter: Optional[Callable[[str], bool]] = None,
+                       root: str = "params",
+                       max_events: Optional[int] = None) -> CampaignResult:
+    """The Fig.2 campaign driven by a recorded error stream instead of iid
+    sampling: one trial per trace event, in arrival order.
+
+    The trace decides *where* each trial strikes (its (dimm, addr) mapped
+    onto the domain's leaves — repeat-offender hard faults land on the
+    same word every time), *how wide* (recorded adjacent-burst widths),
+    and *which kind* (the trace's hard flag selects the sticky
+    ``hard_repeat`` protocol). Replay is bit-deterministic: the same
+    trace on the same state classifies the same outcomes in every run.
+    """
+    domain, wrapped, unwrap = _campaign_domain(state, root)
+    golden_out = np.asarray(eval_fn(unwrap(domain.payload))[0])
+    result = CampaignResult()
+    strikes = TraceReplayer(trace, domain).strikes
+    if max_events is not None:
+        strikes = strikes[:max_events]
+    for strike in strikes:
+        s = domain.spec.by_path[strike.path]
+        if region_filter is not None and not region_filter(s.region):
+            continue
+        outcome = _run_trial(domain, s, strike.plan(), eval_fn, golden_out,
+                             unwrap, wrapped, root, strike.hard,
+                             hard_repeat)
+        result.stat(s.region, "hard" if strike.hard else "soft").add(outcome)
     return result
 
 

@@ -60,14 +60,17 @@ _PAPER_POLICIES: Dict[str, Dict[str, Tier]] = {
     "dected_server": {r: Tier.DECTED for r in WEBSEARCH.fractions},
     "burst_dr_l": {"private": Tier.BURST, "heap": Tier.PARITY_R,
                    "stack": Tier.BURST, "other": Tier.NONE},
+    "mirror_dr_l": {"private": Tier.MIRROR, "heap": Tier.PARITY_R,
+                    "stack": Tier.MIRROR, "other": Tier.NONE},
 }
-_LESS_TESTED = {"less_tested", "detect_recover_l", "burst_dr_l"}
+_LESS_TESTED = {"less_tested", "detect_recover_l", "burst_dr_l",
+                "mirror_dr_l"}
 # design points with the software recovery layer (Table 2): a
 # detected-uncorrectable error is a clean-copy reload, not a machine check
 _SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc",
-                      "burst_dr_l"}
+                      "burst_dr_l", "mirror_dr_l"}
 # design points whose ECC outcomes come from kernel measurement
-_MEASURED_ECC = {"dected_server", "burst_dr_l"}
+_MEASURED_ECC = {"dected_server", "burst_dr_l", "mirror_dr_l"}
 
 
 def _tier_premium(tier: Tier) -> float:

@@ -596,14 +596,27 @@ class MemoryDomain:
                            "words": int((plan.word_idx >= 0).sum())})
         return self._rebuild(leaves, hard_errors=hard_map), events
 
-    def apply_plan(self, path: str, plan: InjectionPlan) -> "MemoryDomain":
-        """Apply a pre-sampled injection plan to one leaf (Fig.2 step 2)."""
+    def apply_plan(self, path: str, plan: InjectionPlan, *,
+                   record_hard: bool = False) -> "MemoryDomain":
+        """Apply a pre-sampled injection plan to one leaf (Fig.2 step 2).
+
+        ``record_hard=True`` additionally registers the flips in the
+        hard-error map (sticky: re-asserted by ``reassert_hard`` until
+        retired) — the trace-replay path uses this for hard events."""
         s = self.spec.by_path[path]
         leaves = self._leaves()
-        leaves[s.pos] = ops.inject_bitflips(
-            leaves[s.pos], jnp.asarray(plan.word_idx),
-            jnp.asarray(plan.bit_idx))
-        return self._rebuild(leaves)
+        wi = jnp.asarray(plan.word_idx)
+        bi = jnp.asarray(plan.bit_idx)
+        leaves[s.pos] = ops.inject_bitflips(leaves[s.pos], wi, bi)
+        hard_map = self.hard_errors
+        if record_hard:
+            hard_map = dict(hard_map)
+            prev = hard_map.get(path)
+            if prev is not None:
+                wi = jnp.concatenate([prev["word"], wi])
+                bi = jnp.concatenate([prev["bit"], bi])
+            hard_map[path] = {"word": wi, "bit": bi}
+        return self._rebuild(leaves, hard_errors=hard_map)
 
     def reassert_hard(self) -> "MemoryDomain":
         """Re-apply all sticky errors (call after every program write —

@@ -75,20 +75,24 @@ class InjectionPlan:
         bits = rng.integers(0, 64, size=n_errors)
         # multi-bit events: add a second flip in the same word — adjacent
         # (correlated burst) with p = adjacent_fraction, else a distinct
-        # random bit (never the same bit: two flips would cancel)
-        extra_w, extra_b = [], []
-        for w, b in zip(words, bits):
-            if rng.random() < multi_bit_fraction:
-                extra_w.append(w)
-                if rng.random() < adjacent_fraction:
-                    b2 = b + 1 if b < 63 else b - 1
-                else:
-                    b2 = int(rng.integers(0, 63))
-                    if b2 >= b:
-                        b2 += 1
-                extra_b.append(b2)
-        words = np.concatenate([words, np.array(extra_w, dtype=np.int64)])
-        bits = np.concatenate([bits, np.array(extra_b, dtype=np.int64)])
+        # random bit (never the same bit: two flips would cancel).
+        # Fully vectorized: one uniform per event decides multi-bit, then
+        # one uniform + one alternate-bit draw per selected event
+        # (tests/test_hrm.py pins the stream for a fixed seed).
+        multi = rng.random(n_errors) < multi_bit_fraction
+        extra_w = words[multi]
+        n_multi = len(extra_w)
+        if n_multi:
+            adj = rng.random(n_multi) < adjacent_fraction
+            alt = rng.integers(0, 63, size=n_multi)
+            b = bits[multi]
+            b_adj = np.where(b < 63, b + 1, b - 1)
+            b_alt = np.where(alt >= b, alt + 1, alt)
+            extra_b = np.where(adj, b_adj, b_alt)
+        else:
+            extra_b = np.empty(0, dtype=np.int64)
+        words = np.concatenate([words, extra_w.astype(np.int64)])
+        bits = np.concatenate([bits, extra_b.astype(np.int64)])
         e = max(pad_to, -(-len(words) // pad_to) * pad_to)
         wi = np.full(e, -1, np.int32)
         bi = np.zeros(e, np.int32)

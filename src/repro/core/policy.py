@@ -174,6 +174,19 @@ def burst_dr_l() -> HRMPolicy:
                      error_model=ErrorModel(less_tested=True))
 
 
+def mirror_dr_l() -> HRMPolicy:
+    """HRM on less-tested devices with full mirroring on the vulnerable
+    regions: MIRROR (replica + parity, Table 1's most expensive tier)
+    where detect_recover_l used SEC-DED, Par+R on the bulky tolerant
+    regions. The top of the protection-vs-capacity curve; availability is
+    *measured* through the MIRROR repair path (``core.eccmeasure``)."""
+    base = detect_recover_l()
+    tiers = {r: (Tier.MIRROR if t == Tier.SECDED else t)
+             for r, t in base.tiers.items()}
+    return HRMPolicy("mirror_dr_l", tiers, default=Tier.NONE,
+                     error_model=ErrorModel(less_tested=True))
+
+
 DESIGN_POINTS = {
     "typical_server": typical_server,
     "consumer_pc": consumer_pc,
@@ -182,4 +195,5 @@ DESIGN_POINTS = {
     "detect_recover_l": detect_recover_l,
     "dected_server": dected_server,
     "burst_dr_l": burst_dr_l,
+    "mirror_dr_l": mirror_dr_l,
 }

@@ -35,7 +35,8 @@ from typing import Dict, List, Optional
 from repro.core.autopolicy import tune_policy, vuln_from_campaign
 from repro.core.availability import (MULTI_BIT_FRACTION, WEBSEARCH_VULN,
                                      VulnProfile, evaluate_availability,
-                                     paper_design_availability)
+                                     paper_design_availability,
+                                     replay_availability)
 from repro.core.costmodel import (MEMORY_COST_SHARE, WEBSEARCH,
                                   RegionProfile, paper_design_costs,
                                   policy_cost_saving, region_fractions)
@@ -47,21 +48,22 @@ from repro.core.tiers import Tier
 WORKLOADS = ("websearch", "kvstore", "graph")
 DESIGNS = ("typical_server", "consumer_pc", "detect_recover",
            "less_tested", "detect_recover_l", "dected_server",
-           "burst_dr_l", "autopolicy")
+           "burst_dr_l", "mirror_dr_l", "autopolicy")
 # design points with a software recovery layer (Table 2); on the others an
 # uncorrectable ECC error is a machine-check crash (the auto-tuned point
 # always assumes the software layer and is handled separately)
 _SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc",
-                      "burst_dr_l"}
+                      "burst_dr_l", "mirror_dr_l"}
 # design points whose ECC outcomes are measured through the real kernels
-MEASURED_ECC_DESIGNS = {"dected_server", "burst_dr_l"}
+MEASURED_ECC_DESIGNS = {"dected_server", "burst_dr_l", "mirror_dr_l"}
 
 
 def _measured_rates():
     """Per-tier outcome rates for the strong-ECC tiers, measured through
-    the DEC-TED / BURST kernels under the availability model's incident
-    mix (lru-cached downstream, so the kernels run once per process)."""
-    return measured_tier_rates((Tier.DECTED, Tier.BURST),
+    the DEC-TED / BURST / MIRROR kernels under the availability model's
+    incident mix (lru-cached downstream, so the kernels run once per
+    process)."""
+    return measured_tier_rates((Tier.DECTED, Tier.BURST, Tier.MIRROR),
                                MULTI_BIT_FRACTION,
                                DEFAULT_ADJACENT_FRACTION)
 
@@ -191,10 +193,11 @@ def build_workload(name: str, **kw) -> Workload:
 
 
 # ----------------------------------------------------------------- sweep
-def _auto_row(w: Workload, availability_target: float,
-              incorrect_target: float) -> ExploreRow:
+def _auto_point(w: Workload, availability_target: float,
+                incorrect_target: float):
     """The auto-tuned point: cheapest feasible tier map over normally- and
-    less-tested devices (the tuner explores the space the paper opens)."""
+    less-tested devices (the tuner explores the space the paper opens).
+    Returns (ExploreRow, tuned HRMPolicy)."""
     best = None
     for less in (False, True):
         try:
@@ -214,12 +217,18 @@ def _auto_row(w: Workload, availability_target: float,
         "autopolicy", best.policy.tiers, w.profile, w.vuln,
         less_tested=best.policy.error_model.less_tested,
         software_response=True)
-    return ExploreRow(w.name, "autopolicy",
-                      best.memory_cost_rel, best.memory_saving,
-                      best.memory_saving * MEMORY_COST_SHARE,
-                      avail.availability, avail.crashes_per_month,
-                      avail.incorrect_per_million,
-                      avail.recoveries_per_month)
+    row = ExploreRow(w.name, "autopolicy",
+                     best.memory_cost_rel, best.memory_saving,
+                     best.memory_saving * MEMORY_COST_SHARE,
+                     avail.availability, avail.crashes_per_month,
+                     avail.incorrect_per_million,
+                     avail.recoveries_per_month)
+    return row, best.policy
+
+
+def _auto_row(w: Workload, availability_target: float,
+              incorrect_target: float) -> ExploreRow:
+    return _auto_point(w, availability_target, incorrect_target)[0]
 
 
 def explore_workload(w: Workload, designs: List[str], *,
@@ -260,6 +269,67 @@ def explore_workload(w: Workload, designs: List[str], *,
     return rows
 
 
+def _design_tiers(name: str, w: Workload) -> Dict[str, Tier]:
+    """Region -> tier map of one design point on workload ``w``'s regions
+    (websearch uses the paper's own region classes)."""
+    if w.paper:
+        from repro.core.costmodel import _PAPER_POLICIES
+        return dict(_PAPER_POLICIES[name])
+    policy = DESIGN_POINTS[name]()
+    return {r: policy.tier_of(r) for r in w.profile.fractions}
+
+
+def explore_workload_trace(w: Workload, designs: List[str], trace, *,
+                           availability_target: float = 0.9990,
+                           incorrect_target: float = 12.0,
+                           seed: int = 0) -> List[ExploreRow]:
+    """The trace-driven twin of ``explore_workload``: costs are identical
+    (capacity is capacity), availability/crash/incorrect columns come from
+    replaying the recorded error stream (``replay_availability``) instead
+    of the analytic incident budget. Rows are tagged ``ecc_src=trace``.
+    Deterministic: the same trace + seed reproduces the table bit-for-bit.
+    """
+    rows: List[ExploreRow] = []
+    need_measured = any(n in MEASURED_ECC_DESIGNS for n in designs)
+    rates = _measured_rates() if need_measured else None
+    paper_costs = paper_design_costs() if w.paper else None
+    for name in designs:
+        if name == "autopolicy":
+            base, policy = _auto_point(w, availability_target,
+                                       incorrect_target)
+            tiers = {r: policy.tier_of(r) for r in w.profile.fractions}
+            a = replay_availability(
+                "autopolicy", tiers, w.profile, w.vuln, trace,
+                software_response=True, seed=seed)
+            rows.append(ExploreRow(
+                w.name, "autopolicy", base.memory_cost_rel,
+                base.memory_saving, base.server_saving, a.availability,
+                a.crashes_per_month, a.incorrect_per_million,
+                a.recoveries_per_month, "trace"))
+            continue
+        if w.paper:
+            c = paper_costs[name]
+            cost_rel, mem_save, srv_save = (c.memory_cost_rel,
+                                            c.memory_saving,
+                                            c.server_saving)
+        else:
+            policy = DESIGN_POINTS[name]()
+            c = policy_cost_saving(policy, w.profile)
+            cost_rel, mem_save, srv_save = (c.memory_cost_rel,
+                                            c.memory_saving,
+                                            c.server_saving)
+        a = replay_availability(
+            name, _design_tiers(name, w), w.profile, w.vuln, trace,
+            software_response=name in _SOFTWARE_RESPONSE,
+            tier_rates=rates if name in MEASURED_ECC_DESIGNS else None,
+            seed=seed)
+        rows.append(ExploreRow(
+            w.name, name, cost_rel, mem_save, srv_save, a.availability,
+            a.crashes_per_month, a.incorrect_per_million,
+            a.recoveries_per_month, "trace"))
+    return rows
+
+
 _HEADER = (f"{'design':18s} {'mem_cost':>8s} {'mem_save':>9s} "
            f"{'srv_save':>9s} {'avail':>9s} {'crash/mo':>9s} "
            f"{'bad/M':>6s} {'recov/mo':>9s} {'ecc_src':>10s}")
@@ -289,6 +359,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--availability-target", type=float, default=0.9990)
     ap.add_argument("--incorrect-target", type=float, default=12.0,
                     help="incorrect responses per million queries")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a recorded error trace (.npz from "
+                         "repro.core.tracegen) and print a trace-driven "
+                         "table next to the analytic one")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="salt for the deterministic per-event region "
+                         "assignment during trace replay")
     ap.add_argument("--dry-run", action="store_true",
                     help="smallest sizes, no campaigns: wiring smoke test")
     args = ap.parse_args(argv)
@@ -297,6 +374,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     designs = list(DESIGNS) if args.design == "all" else [args.design]
     measure = args.measure and not args.dry_run
     n_nodes = 128 if args.dry_run else args.graph_nodes
+    trace = None
+    if args.trace:
+        from repro.core.trace import ErrorTrace
+        trace = ErrorTrace.load(args.trace)
+        print(f"trace: {args.trace} — {len(trace)} events over "
+              f"{trace.months:.2f} server-months")
+        print()
 
     for name in workloads:
         kw: Dict = {}
@@ -310,6 +394,16 @@ def main(argv: Optional[List[str]] = None) -> int:
             incorrect_target=args.incorrect_target)
         print(format_table(w, rows))
         print()
+        if trace is not None:
+            trows = explore_workload_trace(
+                w, designs, trace,
+                availability_target=args.availability_target,
+                incorrect_target=args.incorrect_target,
+                seed=args.trace_seed)
+            print(f"-- {w.name}: trace-driven replay of the same design "
+                  f"points (ecc_src=trace) --")
+            print(format_table(w, trows))
+            print()
     if args.dry_run:
         print("EXPLORE DRY-RUN OK")
     return 0

@@ -51,6 +51,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="tier over the paged KV pools")
     ap.add_argument("--storm-errors", type=int, default=0,
                     help="server-month error budget compressed into the run")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a recorded error trace (.npz from "
+                         "repro.core.tracegen) instead of the Poisson "
+                         "storm — deterministic run-to-run")
     ap.add_argument("--scrub-every", type=int, default=None,
                     help="override the policy's params scrub cadence "
                          "(iterations)")
@@ -89,8 +93,10 @@ def main(argv=None):
               f"({args.process}, rate={args.rate}/s), {toks} KV tokens")
         print(f"plane: slots={args.slots} pages={n_pages} x {page} tokens "
               f"(max {max_pages}/slot), prefills/step<={args.max_prefills}")
+        storm = (f"trace:{args.trace}" if args.trace
+                 else f"{args.storm_errors} errors")
         print(f"reliability: params={args.policy or 'none'} "
-              f"kv={kv_tier.value} storm={args.storm_errors} errors")
+              f"kv={kv_tier.value} storm={storm}")
         return 0
 
     import jax
@@ -108,16 +114,24 @@ def main(argv=None):
             max_prefills_per_step=args.max_prefills,
             max_queue=args.max_queue, seed=args.seed)
 
+    error_trace = None
+    if args.trace:
+        from repro.core.trace import ErrorTrace
+        error_trace = ErrorTrace.load(args.trace)
+        print(f"replaying {error_trace.summary()}")
+
     engine = make_engine()
     print(engine.describe())
     golden = None
     if args.golden:
         g_report, golden = make_engine().run(trace, storm_errors=0)
         print("golden:", g_report.summary())
-    report, responses = engine.run(trace, storm_errors=args.storm_errors)
+    report, responses = engine.run(trace, storm_errors=args.storm_errors,
+                                   error_trace=error_trace)
     if golden is not None:
         report.incorrect_rate = incorrect_rate(golden, responses)
-    print("storm: " if args.storm_errors else "run:   ", report.summary())
+    stormy = args.storm_errors or error_trace is not None
+    print("storm: " if stormy else "run:   ", report.summary())
     print(f"availability {report.availability:.4%} vs paper bar 99.90%: "
           f"{'PASS' if report.availability >= 0.9990 else 'FAIL'}")
     if args.json:

@@ -48,6 +48,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import HRMPolicy, MemoryDomain, Tier
 from repro.core.availability import MINUTES_PER_MONTH
+from repro.core.trace import BoundStrike, ErrorTrace, bind_trace
 from repro.models import forward
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
@@ -317,6 +318,21 @@ class OnlineEngine:
             self.cache.adopt_pools(kv["k"], kv["v"])
             counters.injected_kv += 1
 
+    def _inject_bound(self, strike: BoundStrike, counters: SLOCounters
+                      ) -> None:
+        """Fire one trace-bound strike into its resolved domain/leaf/word
+        (the replay twin of ``_inject_one``)."""
+        if strike.domain == "params":
+            self.param_domain = self.param_domain.apply_plan(
+                strike.path, strike.plan(), record_hard=strike.hard)
+            counters.injected_params += 1
+        else:
+            self.kv_domain = self.kv_domain.apply_plan(
+                strike.path, strike.plan(), record_hard=strike.hard)
+            kv = self.kv_domain.payload["kv_cache"]
+            self.cache.adopt_pools(kv["k"], kv["v"])
+            counters.injected_kv += 1
+
     def _scrub_params(self, counters: SLOCounters) -> None:
         self.param_domain, rep = self.param_domain.scrub()
         c, u = rep.totals()
@@ -361,16 +377,30 @@ class OnlineEngine:
 
     # ---------------------------------------------------------------- run
     def run(self, trace: List[Request], *, storm_errors: int = 0,
+            error_trace: Optional[ErrorTrace] = None,
             month_minutes: float = MINUTES_PER_MONTH,
             max_iters: int = 200_000) -> Tuple[SLOReport, Dict[int,
                                                                List[int]]]:
         """Serve the trace to completion. Returns the SLO report and a
-        ``{rid: generated tokens}`` map (for golden comparison)."""
+        ``{rid: generated tokens}`` map (for golden comparison).
+
+        ``error_trace`` replaces the Poisson storm with a recorded error
+        stream: its events are bound onto the params + KV domains (one
+        shared physical address space), compressed onto the arrival
+        window, and fired deterministically — two runs with the same
+        trace produce identical availability/incorrect numbers."""
         router = RequestRouter(trace, max_queue=self.max_queue)
         counters = SLOCounters()
         last_arrival = max((r.arrival for r in trace), default=0.0)
         span = max(last_arrival, 1e-6)
-        storm = deque(np.sort(self.rng.uniform(0.0, span, storm_errors)))
+        if error_trace is not None:
+            bound = bind_trace(error_trace,
+                               {"params": self.param_domain,
+                                "kv_cache": self.kv_domain}, span=span)
+            storm = deque((s.t, s) for s in bound)
+        else:
+            storm = deque((t, None) for t in np.sort(
+                self.rng.uniform(0.0, span, storm_errors)))
         now = 0.0
         it = 0
         while not (router.drained and self.sched.n_active == 0):
@@ -444,17 +474,23 @@ class OnlineEngine:
             else:
                 self.kv_domain = self.kv_domain.adopt(self._kv_state())
             # 6. the storm: fire every error due by the current clock
-            while storm and storm[0] <= now:
-                storm.popleft()
-                self._inject_one(counters)
+            while storm and storm[0][0] <= now:
+                _, strike = storm.popleft()
+                if strike is None:
+                    self._inject_one(counters)
+                else:
+                    self._inject_bound(strike, counters)
             if self.debug_invariants:
                 self.cache.check_invariants()
             it += 1
         # drain the storm tail + one final scrub so every injected error
         # is detected/recovered and accounted before availability is read
         while storm:
-            storm.popleft()
-            self._inject_one(counters)
+            _, strike = storm.popleft()
+            if strike is None:
+                self._inject_one(counters)
+            else:
+                self._inject_bound(strike, counters)
         if self.kv_tier is not Tier.NONE:
             self._scrub_kv(counters)
         if self.params_policy is not None:

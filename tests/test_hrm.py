@@ -52,12 +52,48 @@ def test_design_points_all_defined():
     assert set(DESIGN_POINTS) == {"typical_server", "consumer_pc",
                                   "detect_recover", "less_tested",
                                   "detect_recover_l", "dected_server",
-                                  "burst_dr_l"}
+                                  "burst_dr_l", "mirror_dr_l"}
     # the strong-ECC extensions use the true multi-bit codes everywhere
     # they protect
     assert set(DESIGN_POINTS["dected_server"]().tiers.values()) == {
         Tier.DECTED}
     assert Tier.BURST in DESIGN_POINTS["burst_dr_l"]().tiers.values()
+    assert Tier.MIRROR in DESIGN_POINTS["mirror_dr_l"]().tiers.values()
+
+
+# ---------------------------------------------- injection-plan sampling
+def test_injection_plan_sample_golden():
+    """The vectorized sampler's stream is pinned for a fixed seed — any
+    change to the draw order silently re-rolls every campaign."""
+    from repro.core.errormodel import InjectionPlan
+    p = InjectionPlan.sample(1234, 4096, 16, True, multi_bit_fraction=0.5,
+                             adjacent_fraction=0.5)
+    assert p.hard is True
+    assert p.word_idx.tolist() == [
+        4011, 4000, 4046, 1557, 701, 3781, 429, 1071, 568, 1307, 2195,
+        483, 3259, 990, 3219, 1304, 4000, 4046, 701, 568, 2195, 3259,
+        990, 1304]
+    assert p.bit_idx.tolist() == [
+        50, 61, 61, 16, 35, 28, 16, 39, 57, 55, 41, 55, 33, 43, 61, 42,
+        27, 52, 36, 17, 42, 55, 44, 43]
+
+
+def test_injection_plan_sample_invariants():
+    from repro.core.errormodel import InjectionPlan
+    for seed in range(30):
+        p = InjectionPlan.sample(seed, 512, 8, False,
+                                 multi_bit_fraction=0.8,
+                                 adjacent_fraction=0.5)
+        live = p.word_idx >= 0
+        n_live = int(live.sum())
+        assert n_live >= 8 and len(p.word_idx) % 8 == 0
+        # every extra flip shares its word with a primary and never
+        # repeats the primary bit (two flips would cancel)
+        for w, b in zip(p.word_idx[8:n_live], p.bit_idx[8:n_live]):
+            prim = [(pw, pb) for pw, pb in zip(p.word_idx[:8],
+                                               p.bit_idx[:8]) if pw == w]
+            assert prim and all(pb != b for _, pb in prim)
+        assert np.all((p.bit_idx[live] >= 0) & (p.bit_idx[live] < 64))
 
 
 # ------------------------------------------------------- sidecar overheads

@@ -1,0 +1,199 @@
+"""Field-trace replay tests: generator shape, .npz round-trip, address
+binding determinism, the virtual-clock replayer, the trace-driven
+campaign/availability paths, and the explore.py trace tables."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ErrorTrace, HRMPolicy, MemoryDomain, Tier,
+                        TraceGenConfig, bind_trace, generate_error_trace,
+                        replay_availability, run_trace_campaign)
+from repro.core.availability import WEBSEARCH_VULN
+from repro.core.costmodel import WEBSEARCH
+from repro.core.trace import SECONDS_PER_MONTH, TraceReplayer
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_error_trace(
+        TraceGenConfig(n_events=80, n_dimms=4), seed=11)
+
+
+@pytest.fixture()
+def domain():
+    state = {"params": {
+        "embed": jnp.arange(4096, dtype=jnp.float32).reshape(64, 64),
+        "mlp": jnp.ones((64, 64), jnp.float32)}}
+    return MemoryDomain.protect(state, HRMPolicy("t", {},
+                                                 default=Tier.NONE))
+
+
+# ---------------------------------------------------------- generation
+def test_tracegen_field_shape(trace):
+    assert len(trace) == 80
+    assert np.all(np.diff(trace.t) >= 0)
+    assert trace.duration == pytest.approx(SECONDS_PER_MONTH)
+    assert trace.months == pytest.approx(1.0)
+    # field-study structure: ~40% hard, bursts within a word, addr reuse
+    hard_frac = trace.hard.mean()
+    assert 0.2 <= hard_frac <= 0.6
+    assert trace.burst.min() >= 1 and trace.burst.max() <= 4
+    assert np.all(trace.bit.astype(int) + trace.burst.astype(int) <= 64)
+    phys = trace.dimm.astype(np.int64) * trace.dimm_bytes + trace.addr
+    assert len(np.unique(phys)) < len(trace)      # repeat offenders exist
+    # hard events reuse the per-DIMM fault pools
+    hard_phys = phys[trace.hard]
+    assert len(np.unique(hard_phys)) <= 4 * 3     # n_dimms * faults_per_dimm
+
+
+def test_tracegen_deterministic():
+    cfg = TraceGenConfig(n_events=40)
+    a = generate_error_trace(cfg, seed=5)
+    b = generate_error_trace(cfg, seed=5)
+    for f in ("t", "dimm", "addr", "bit", "burst", "hard"):
+        assert np.array_equal(getattr(a, f), getattr(b, f))
+    c = generate_error_trace(cfg, seed=6)
+    assert not np.array_equal(a.addr, c.addr)
+
+
+def test_trace_roundtrip(tmp_path, trace):
+    p = trace.save(tmp_path / "t.npz")
+    back = ErrorTrace.load(p)
+    for f in ("t", "dimm", "addr", "bit", "burst", "hard"):
+        assert np.array_equal(getattr(trace, f), getattr(back, f))
+    assert back.dimm_bytes == trace.dimm_bytes
+    assert back.duration == pytest.approx(trace.duration)
+    assert back.meta.get("generator") == trace.meta.get("generator")
+
+
+def test_trace_validation():
+    ok = dict(t=np.array([0.0, 1.0]), dimm=np.zeros(2, np.int32),
+              addr=np.zeros(2, np.int64), bit=np.array([0, 4], np.int8),
+              burst=np.ones(2, np.int8), hard=np.zeros(2, bool))
+    ErrorTrace(**ok)
+    with pytest.raises(ValueError):
+        ErrorTrace(**{**ok, "t": np.array([1.0, 0.0])})
+    with pytest.raises(ValueError):
+        ErrorTrace(**{**ok, "bit": np.array([0, 64], np.int8)})
+    with pytest.raises(ValueError):
+        ErrorTrace(**{**ok, "bit": np.array([62, 0], np.int8),
+                      "burst": np.array([4, 1], np.int8)})
+
+
+# ------------------------------------------------------------- binding
+def test_bind_deterministic_and_repeat_offenders(trace, domain):
+    s1 = bind_trace(trace, {"d": domain})
+    s2 = bind_trace(trace, {"d": domain})
+    assert s1 == s2
+    # the same physical (dimm, addr) always lands on the same (leaf, word)
+    phys = trace.dimm.astype(np.int64) * trace.dimm_bytes + trace.addr
+    seen = {}
+    for i, s in enumerate(s1):
+        key = int(phys[i])
+        if key in seen:
+            assert (s.path, s.word) == seen[key]
+        seen[key] = (s.path, s.word)
+    # burst widths survive binding as contiguous bit runs
+    for i, s in enumerate(s1):
+        assert len(s.bits) == int(trace.burst[i])
+        assert list(s.bits) == list(range(s.bits[0],
+                                          s.bits[0] + len(s.bits)))
+
+
+def test_replayer_virtual_clock(trace, domain):
+    rep = TraceReplayer(trace, domain)
+    assert len(rep) == len(trace)
+    mid = float(np.median(trace.t))
+    d2, fired = rep.play(domain, until=mid)
+    assert 0 < len(fired) < len(trace)
+    assert all(s.t <= mid for s in fired)
+    assert rep.remaining == len(trace) - len(fired)
+    d3, rest = rep.play(d2)
+    assert len(fired) + len(rest) == len(trace)
+    assert rep.next_time() is None
+    # hard strikes are recorded in the domain's hard-error map
+    hard_paths = {s.path for s in fired + rest if s.hard}
+    assert hard_paths <= set(d3.hard_errors)
+    # payload actually changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jnp_leaves(domain.payload), jnp_leaves(d3.payload)))
+    assert changed
+    rep.reset()
+    assert rep.remaining == len(trace)
+
+
+def jnp_leaves(tree):
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+# -------------------------------------------------------- availability
+def test_replay_availability_deterministic(trace):
+    tiers = {"private": Tier.SECDED, "heap": Tier.PARITY_R,
+             "stack": Tier.PARITY_R, "other": Tier.NONE}
+    a = replay_availability("x", tiers, WEBSEARCH, WEBSEARCH_VULN, trace)
+    b = replay_availability("x", tiers, WEBSEARCH, WEBSEARCH_VULN, trace)
+    assert (a.availability, a.crashes_per_month, a.incorrect_per_million,
+            a.recoveries_per_month) == \
+           (b.availability, b.crashes_per_month, b.incorrect_per_million,
+            b.recoveries_per_month)
+    # stronger protection can't be worse on the same event stream
+    none_tiers = {r: Tier.NONE for r in WEBSEARCH.fractions}
+    worst = replay_availability("none", none_tiers, WEBSEARCH,
+                                WEBSEARCH_VULN, trace)
+    assert a.availability >= worst.availability
+    assert a.incorrect_per_million <= worst.incorrect_per_million
+
+
+def test_replay_availability_burst_rules(trace):
+    # DECTED corrects every burst <= 2 and detects 3: with software
+    # response nothing is consumed at widths <= 3
+    tiers = {r: Tier.DECTED for r in WEBSEARCH.fractions}
+    if int(trace.burst.max()) <= 3:
+        a = replay_availability("dt", tiers, WEBSEARCH, WEBSEARCH_VULN,
+                                trace)
+        assert a.incorrect_per_million == 0.0
+
+
+def test_explore_trace_rows(trace):
+    from repro.launch.explore import (build_workload, explore_workload,
+                                      explore_workload_trace)
+    w = build_workload("websearch")
+    designs = ["typical_server", "detect_recover"]
+    rows = explore_workload_trace(w, designs, trace)
+    again = explore_workload_trace(w, designs, trace)
+    assert [r.design for r in rows] == designs
+    assert all(r.ecc_source == "trace" for r in rows)
+    for r1, r2 in zip(rows, again):
+        assert (r1.availability, r1.crashes_per_month,
+                r1.incorrect_per_million) == \
+               (r2.availability, r2.crashes_per_month,
+                r2.incorrect_per_million)
+    # capacity columns match the analytic table (cost is cost)
+    arows = explore_workload(w, designs)
+    for tr, ar in zip(rows, arows):
+        assert tr.memory_cost_rel == ar.memory_cost_rel
+
+
+# ------------------------------------------------------------ campaign
+def test_trace_campaign_deterministic():
+    trace = generate_error_trace(
+        TraceGenConfig(n_events=12, n_dimms=2), seed=3)
+    state = {"w": jnp.arange(2048, dtype=jnp.float32)}
+
+    def eval_fn(s):
+        ok = jnp.isfinite(s["w"]).all() & (jnp.abs(s["w"]).max() < 1e12)
+        return jnp.where(ok, jnp.ones(3, jnp.int32), -1), s
+
+    r1 = run_trace_campaign(eval_fn, state, trace)
+    r2 = run_trace_campaign(eval_fn, state, trace)
+    assert {k: v.counts for k, v in r1.stats.items()} == \
+           {k: v.counts for k, v in r2.stats.items()}
+    total = sum(sum(v.counts.values()) for v in r1.stats.values())
+    assert total == len(trace)
+    kinds = {k for _, k in r1.stats}
+    assert kinds <= {"soft", "hard"}
+    capped = run_trace_campaign(eval_fn, state, trace, max_events=5)
+    assert sum(sum(v.counts.values())
+               for v in capped.stats.values()) == 5

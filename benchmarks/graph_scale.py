@@ -1,0 +1,198 @@
+"""Datacenter-scale graph plane benchmark: node-blocked push throughput,
+frontier-sparse BFS, and scrub/compute overlap. Writes
+``BENCH_graph_scale.json``.
+
+Three questions, one JSON:
+
+  * **throughput** — edges/s of the node-blocked PageRank push at an N
+    past the dense single-kernel VMEM bound (~4096 nodes at the default
+    edge tile), with the dense layout timed alongside when N still fits;
+  * **frontier sparsity** — wall-clock of frontier-sparse BFS vs dense
+    blocked dispatch on the same state (power-law frontiers leave most
+    source blocks inactive most levels);
+  * **overlap** — per-iteration wall-clock of ``pagerank_scrubbed``
+    (one incremental ``scrub_partial`` slice + rank re-encode per
+    iteration) vs the unprotected loop: the paper's requirement that
+    protection stay off the critical path, quantified as overhead %.
+
+  PYTHONPATH=src python -m benchmarks.run graph_scale    # modest N
+  PYTHONPATH=src python -m benchmarks.graph_scale        # full scale
+  PYTHONPATH=src python -m benchmarks.graph_scale --dry-run   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+from benchmarks.common import Row
+
+OUT_JSON = "BENCH_graph_scale.json"
+# dense single-kernel VMEM bound (see repro.kernels.segsum): the full
+# (n, edge_tile) one-hot masks stop fitting one core's VMEM near here
+DENSE_BOUND_N = 4096
+
+
+def run(n_nodes: int = 8192, node_block: int = 1024, iters: int = 3,
+        scrub_slices: int = 8, bfs_backend: str = "pallas",
+        out_json: str = OUT_JSON, dry_run: bool = False) -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import MemoryDomain, typical_server
+    from repro.graph import (bfs, graph_state, pagerank, pagerank_step,
+                             powerlaw_graph)
+
+    g = powerlaw_graph(n_nodes, avg_degree=8, seed=0)
+    state = graph_state(g, with_bfs=True, node_block=node_block)
+    tiles = int(state["topology"]["blocks"]["src_block"].shape[0])
+    edges = g.n_edges
+
+    def time_iters(step_fn, k, warmup: int = 1):
+        for _ in range(warmup):                     # compile off the clock
+            jax.block_until_ready(step_fn())
+        t0 = time.perf_counter()
+        for _ in range(k):
+            jax.block_until_ready(step_fn())
+        return (time.perf_counter() - t0) * 1e6 / k
+
+    # ---- blocked push throughput (per power iteration)
+    # NB: each thunk must RETURN the new state — block_until_ready(None)
+    # is a no-op and async dispatch would pipeline iterations.
+    st = {"s": state}
+
+    def blocked_iter():
+        st["s"] = pagerank_step(st["s"], g.n)
+        return st["s"]
+
+    us_blocked = time_iters(blocked_iter, iters)
+    eps_blocked = edges / (us_blocked / 1e6)
+
+    # ---- dense layout alongside, while it still fits
+    us_dense = None
+    if n_nodes <= DENSE_BOUND_N:
+        sd = {"s": graph_state(g, with_bfs=True)}
+
+        def dense_iter():
+            sd["s"] = pagerank_step(sd["s"], g.n)
+            return sd["s"]
+
+        us_dense = time_iters(dense_iter, iters)
+
+    # ---- convergence at scale (fori: one dispatch for the whole run)
+    _, rank, delta = pagerank(state, g.n, iters=max(2 * iters, 5),
+                              fori=True)
+    converged = bool(jnp.isfinite(rank).all())
+
+    # ---- frontier-sparse vs dense blocked BFS (the level trajectory is
+    # deterministic, so one warmup traversal compiles every tile-count
+    # shape the sparse path will dispatch)
+    dist_sp = None
+
+    def bfs_sparse():
+        nonlocal dist_sp
+        _, dist_sp = bfs(state, backend=bfs_backend)
+        return dist_sp
+
+    us_bfs_sparse = time_iters(bfs_sparse, 1)
+    dist_dn = None
+
+    def bfs_dense():
+        nonlocal dist_dn
+        _, dist_dn = bfs(state, backend=bfs_backend, sparse=False)
+        return dist_dn
+
+    us_bfs_dense = time_iters(bfs_dense, 1)
+    assert bool(jnp.all(dist_sp == dist_dn)), "sparse BFS diverged"
+    levels = int(jnp.max(dist_sp)) if converged else -1
+
+    # ---- scrub/compute overlap: plain loop vs scrub_partial-interleaved
+    from repro.graph import pagerank_scrubbed
+    us_plain = us_blocked
+    domain = MemoryDomain.protect({"graph": state}, typical_server())
+    dom_box = {"d": domain, "it": 0}
+
+    def scrubbed_iter():
+        d, rep = None, None
+        from repro.graph.pagerank import _region_paths
+        paths = _region_paths(dom_box["d"],
+                              ("graph/topology", "graph/rank"))
+        s = pagerank_step(dom_box["d"].payload["graph"], g.n)
+        d = dom_box["d"].refresh({"graph": s}, paths=["graph/rank/rank"])
+        d, rep = d.scrub_partial(dom_box["it"], slices=scrub_slices,
+                                 paths=paths)
+        dom_box["d"], dom_box["it"] = d, dom_box["it"] + 1
+        return d.payload["graph"]  # block on rank AND spliced topology
+
+    # warm every slice program of the cursor's cycle before the clock runs
+    us_scrubbed = time_iters(scrubbed_iter, iters, warmup=scrub_slices)
+    overhead = (us_scrubbed - us_plain) / us_plain
+
+    # whole-run sanity: the overlapped driver reproduces the plain rank
+    dom2 = MemoryDomain.protect({"graph": state}, typical_server())
+    dom2, rank_s, _, _ = pagerank_scrubbed(dom2, g.n, iters=2,
+                                           scrub_slices=scrub_slices)
+
+    report = {
+        "n_nodes": n_nodes, "node_block": node_block, "edges": edges,
+        "edge_tiles": tiles, "iters_timed": iters, "dry_run": dry_run,
+        "edges_per_s_blocked": eps_blocked,
+        "iter_us_blocked": us_blocked, "iter_us_dense": us_dense,
+        "pagerank_converged": converged, "residual": float(delta),
+        "bfs_levels": levels, "bfs_us_sparse": us_bfs_sparse,
+        "bfs_us_dense": us_bfs_dense,
+        "bfs_sparse_speedup": us_bfs_dense / max(us_bfs_sparse, 1e-9),
+        "scrub_slices": scrub_slices, "iter_us_scrubbed": us_scrubbed,
+        "scrub_overhead_pct": 100.0 * overhead,
+        "scrub_rank_matches": bool(jnp.isfinite(rank_s).all()),
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    rows = [
+        Row("graph_scale/push_blocked", us_blocked,
+            f"n={n_nodes}_bn={node_block}_{eps_blocked / 1e6:.2f}Medges/s"),
+        Row("graph_scale/bfs_sparse", us_bfs_sparse,
+            f"speedup_vs_dense={report['bfs_sparse_speedup']:.2f}x_"
+            f"levels={levels}"),
+        Row("graph_scale/scrub_overlap", us_scrubbed,
+            f"overhead={100.0 * overhead:.2f}%_slices={scrub_slices}"),
+    ]
+    if us_dense is not None:
+        rows.insert(1, Row("graph_scale/push_dense", us_dense,
+                           f"blocked_ratio={us_blocked / us_dense:.2f}x"))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Node-blocked graph-plane benchmark: push throughput, "
+                    "frontier-sparse BFS, scrub/compute overlap.")
+    ap.add_argument("--nodes", type=int, default=10 * DENSE_BOUND_N,
+                    help="graph size (default: 10x the dense VMEM bound)")
+    ap.add_argument("--node-block", type=int, default=4096)
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timed power iterations per measurement")
+    ap.add_argument("--scrub-slices", type=int, default=8)
+    ap.add_argument("--out", default=OUT_JSON)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes: exercises every measured path and "
+                         "writes the JSON in seconds (CI smoke)")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        rows = run(n_nodes=1024, node_block=256, iters=1, scrub_slices=4,
+                   out_json=args.out, dry_run=True)
+        for row in rows:
+            print(row.csv())
+        print("GRAPH_SCALE DRY-RUN OK")
+        return 0
+    for row in run(n_nodes=args.nodes, node_block=args.node_block,
+                   iters=args.iters, scrub_slices=args.scrub_slices,
+                   out_json=args.out):
+        print(row.csv())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,7 +11,7 @@ import sys
 import traceback
 
 BENCHES = ("table1", "fig3", "fig4", "fig5", "scrub", "roofline",
-           "serve_slo")
+           "serve_slo", "graph_scale")
 
 
 def _load(name: str):
@@ -29,6 +29,8 @@ def _load(name: str):
         from benchmarks import roofline as m
     elif name == "serve_slo":
         from benchmarks import serve_slo as m
+    elif name == "graph_scale":
+        from benchmarks import graph_scale as m
     else:
         raise KeyError(name)
     return m

@@ -211,6 +211,49 @@ def _block_rows(padded: int) -> int:
     return padded if ops.INTERPRET else min(BLOCK_ROWS, padded)
 
 
+def _scrub_tier_buf(tier: Tier, lo, hi, pull, push, bm: int):
+    """Run one tier's scrub kernel over a packed (rows, LANES) word window.
+
+    ``pull(name, cast)`` / ``push(name, new, cast)`` read and write the
+    sidecar rows matching the window. Returns per-row
+    ``(lo2, hi2, corrected, uncorrectable, data_modified)`` —
+    ``data_modified=False`` for detect-only PARITY_R, whose counts land in
+    the uncorrectable column and whose data/sidecar are left untouched.
+    """
+    if tier is Tier.SECDED:
+        lo2, hi2, ecc2, c, u = secded_scrub_words(
+            lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
+            interpret=ops.INTERPRET)
+        push("ecc", ecc2, jnp.uint8)
+    elif tier is Tier.DECTED:
+        lo2, hi2, ecc2, c, u = dected_scrub_words(
+            lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
+            interpret=ops.INTERPRET)
+        push("ecc", ecc2, jnp.uint16)
+    elif tier is Tier.BURST:
+        lo2, hi2, ecc2, c, u = burst_scrub_words(
+            lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
+            interpret=ops.INTERPRET)
+        push("ecc", ecc2, jnp.uint16)
+    elif tier is Tier.PARITY_R:
+        _err, cnt = parity_check_words(
+            lo, hi, pull("par", jnp.uint32), block_rows=bm,
+            interpret=ops.INTERPRET)
+        return lo, hi, jnp.zeros_like(cnt), cnt, False
+    elif tier is Tier.MIRROR:
+        err, _ = parity_check_words(
+            lo, hi, pull("par", jnp.uint32), block_rows=bm,
+            interpret=ops.INTERPRET)
+        mask = _parity_mask(err, lo)
+        lo2 = jnp.where(mask, pull("copy_lo"), lo)
+        hi2 = jnp.where(mask, pull("copy_hi"), hi)
+        c = jnp.sum(mask.astype(jnp.int32), axis=1, keepdims=True)
+        u = jnp.zeros_like(c)
+    else:
+        raise ValueError(tier)
+    return lo2, hi2, c, u, True
+
+
 @functools.lru_cache(maxsize=None)
 def _compiled_scrub(spec: DomainSpec, key: Optional[Tuple[str, ...]]
                     ) -> Callable:
@@ -247,53 +290,99 @@ def _compiled_scrub(spec: DomainSpec, key: Optional[Tuple[str, ...]]
                                                           for s in sel)])
 
             lo, hi = _gather_packed(leaves, sel, padded)
-            if tier is Tier.SECDED:
-                lo2, hi2, ecc2, c, u = secded_scrub_words(
-                    lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
-                    interpret=ops.INTERPRET)
-                push("ecc", ecc2, jnp.uint8)
-            elif tier is Tier.DECTED:
-                lo2, hi2, ecc2, c, u = dected_scrub_words(
-                    lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
-                    interpret=ops.INTERPRET)
-                push("ecc", ecc2, jnp.uint16)
-            elif tier is Tier.BURST:
-                lo2, hi2, ecc2, c, u = burst_scrub_words(
-                    lo, hi, pull("ecc", jnp.uint32), block_rows=bm,
-                    interpret=ops.INTERPRET)
-                push("ecc", ecc2, jnp.uint16)
-            elif tier is Tier.PARITY_R:
-                # parity detects only: no corrected leaves, no writes
-                _err, cnt = parity_check_words(
-                    lo, hi, pull("par", jnp.uint32), block_rows=bm,
-                    interpret=ops.INTERPRET)
-                off = 0
-                for s in sel:
-                    unc[s.path] = jnp.sum(cnt[off:off + s.rows])
-                    off += s.rows
-                continue
-            elif tier is Tier.MIRROR:
-                err, _ = parity_check_words(
-                    lo, hi, pull("par", jnp.uint32), block_rows=bm,
-                    interpret=ops.INTERPRET)
-                mask = _parity_mask(err, lo)
-                lo2 = jnp.where(mask, pull("copy_lo"), lo)
-                hi2 = jnp.where(mask, pull("copy_hi"), hi)
-                c = jnp.sum(mask.astype(jnp.int32), axis=1,
-                            keepdims=True)
-                u = jnp.zeros_like(c)
-            else:
-                raise ValueError(tier)
-
+            lo2, hi2, c, u, wrote = _scrub_tier_buf(tier, lo, hi, pull,
+                                                    push, bm)
             off = 0
             for s in sel:
                 sl = slice(off, off + s.rows)
-                mod[s.pos] = ops.unpack_words(
-                    ops.Packed(lo2[sl], hi2[sl]), s.shape,
-                    jnp.dtype(s.dtype))
-                corr[s.path] = jnp.sum(c[sl])
+                if wrote:
+                    mod[s.pos] = ops.unpack_words(
+                        ops.Packed(lo2[sl], hi2[sl]), s.shape,
+                        jnp.dtype(s.dtype))
+                    corr[s.path] = jnp.sum(c[sl])
                 unc[s.path] = jnp.sum(u[sl])
                 off += s.rows
+        return mod, new_sc, corr, unc
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_scrub_rows(spec: DomainSpec, key: Optional[Tuple[str, ...]],
+                         idx: int, slices: int) -> Callable:
+    """One jit program scrubbing row slice ``idx`` of ``slices`` over the
+    selection — the incremental-scrub cursor's compiled step.
+
+    The slice is taken per tier over the *virtual* concatenated row space
+    of the selected leaves (so every tier advances each call and finishes
+    together after ``slices`` calls), cut at packed-row boundaries: a row
+    holds whole 64-bit words of one leaf, so slicing never splits an ECC
+    codeword. Leaves overlapping the window are spliced at row
+    granularity — the corrected rows replace the leaf's packed rows and
+    the leaf is rebuilt, bit-identical outside the window.
+    """
+    selected = spec.select(key)
+
+    def fn(leaves, sidecar):
+        mod: Dict[int, jax.Array] = {}
+        new_sc = {k: dict(v) for k, v in sidecar.items()}
+        corr: Dict[str, jax.Array] = {}
+        unc: Dict[str, jax.Array] = {}
+        for tier in _tier_order(selected):
+            sel = selected[tier]
+            total = sum(s.rows for s in sel)
+            lo_r = (idx * total) // slices
+            hi_r = ((idx + 1) * total) // slices
+            if hi_r <= lo_r:
+                continue
+            # leaf pieces overlapping the window, in leaf-local rows
+            pieces = []
+            off = 0
+            for s in sel:
+                a, b = max(lo_r - off, 0), min(hi_r - off, s.rows)
+                if a < b:
+                    pieces.append((s, a, b))
+                off += s.rows
+            padded = _round_rows(hi_r - lo_r)
+            bm = _block_rows(padded)
+            sc = sidecar[tier.value]
+            packed = {s.path: ops.pack_words(leaves[s.pos])
+                      for s, _, _ in pieces}
+            lo = _concat_pad([packed[s.path].lo[a:b]
+                              for s, a, b in pieces], padded)
+            hi = _concat_pad([packed[s.path].hi[a:b]
+                              for s, a, b in pieces], padded)
+
+            def pull(name, cast=None):
+                out = _concat_pad(
+                    [sc[name][s.row_start + a:s.row_start + b]
+                     for s, a, b in pieces], padded)
+                return out.astype(cast) if cast is not None else out
+
+            def push(name, new, cast=None):
+                new = new.astype(cast) if cast is not None else new
+                buf = new_sc[tier.value][name]
+                o = 0
+                for s, a, b in pieces:
+                    buf = buf.at[s.row_start + a:s.row_start + b].set(
+                        new[o:o + (b - a)])
+                    o += b - a
+                new_sc[tier.value][name] = buf
+
+            lo2, hi2, c, u, wrote = _scrub_tier_buf(tier, lo, hi, pull,
+                                                    push, bm)
+            o = 0
+            for s, a, b in pieces:
+                sl = slice(o, o + (b - a))
+                if wrote:
+                    p = packed[s.path]
+                    mod[s.pos] = ops.unpack_words(
+                        ops.Packed(p.lo.at[a:b].set(lo2[sl]),
+                                   p.hi.at[a:b].set(hi2[sl])),
+                        s.shape, jnp.dtype(s.dtype))
+                    corr[s.path] = jnp.sum(c[sl])
+                unc[s.path] = jnp.sum(u[sl])
+                o += b - a
         return mod, new_sc, corr, unc
 
     return jax.jit(fn)
@@ -505,6 +594,38 @@ class MemoryDomain:
         key = self.spec.paths_key(paths)
         mod, new_sc, corr, unc = _compiled_scrub(self.spec, key)(
             tuple(self._leaves()), self.sidecar)
+        leaves = self._leaves()
+        for pos, leaf in mod.items():
+            leaves[pos] = leaf
+        report = ScrubReport(corrected=dict(corr),
+                             detected_uncorrectable=dict(unc))
+        return self._rebuild(leaves, sidecar=new_sc), report
+
+    def scrub_partial(self, cursor: int, *, slices: int = 8,
+                      paths: Optional[Iterable[str]] = None
+                      ) -> Tuple["MemoryDomain", ScrubReport]:
+        """Incremental scrub: verify + correct row slice
+        ``cursor % slices`` of the selected leaves (1/``slices`` of their
+        packed rows, per tier), so calling once per iteration with an
+        advancing cursor completes a full scrub pass every ``slices``
+        iterations while putting only a sliver of scrub work on each
+        iteration's critical path — the scrub/compute-overlap primitive
+        behind ``pagerank_scrubbed``/``bfs_scrubbed``.
+
+        Slices cut at packed-row boundaries (never through a codeword);
+        within one full cycle every selected row is scrubbed exactly
+        once, so ``slices`` consecutive calls correct everything one
+        ``scrub()`` would (corrections land as cursor reaches the row).
+        Returns (domain, ScrubReport of this slice).
+        """
+        if slices <= 1:
+            return self.scrub(paths=paths)
+        if not self.spec.groups:
+            return self, ScrubReport()
+        key = self.spec.paths_key(paths)
+        mod, new_sc, corr, unc = _compiled_scrub_rows(
+            self.spec, key, int(cursor) % slices, int(slices))(
+                tuple(self._leaves()), self.sidecar)
         leaves = self._leaves()
         for pos, leaf in mod.items():
             leaves[pos] = leaf

@@ -2,15 +2,22 @@
 synthetic power-law graphs in CSR layout, PageRank and BFS driven by the
 Pallas segment-sum kernels, all protectable as a ``MemoryDomain`` with
 per-region tiers (``graph/topology`` / ``graph/rank`` /
-``graph/frontier``). See ``docs/DESIGN.md`` for where this sits in the
-architecture and ``repro.launch.explore`` for the cross-workload sweep.
+``graph/frontier``). States built with ``graph_state(...,
+node_block=BN)`` use the node-blocked layout — bucketed edge tiles,
+frontier-sparse BFS dispatch, and scrub/compute overlap via
+``pagerank_scrubbed``/``bfs_scrubbed`` — for graphs past the
+single-kernel VMEM bound. See ``docs/DESIGN.md`` for where this sits in
+the architecture and ``repro.launch.explore`` for the cross-workload
+sweep.
 """
 from repro.graph.bfs import (  # noqa: F401
-    bfs, bfs_eval_fn, bfs_reference, bfs_step,
+    bfs, bfs_eval_fn, bfs_reference, bfs_scrubbed, bfs_step,
 )
 from repro.graph.generate import (  # noqa: F401
-    CSRGraph, graph_state, n_padded, powerlaw_graph,
+    CSRGraph, bucket_edges, graph_state, n_padded, node_block_of,
+    powerlaw_graph,
 )
 from repro.graph.pagerank import (  # noqa: F401
-    BACKENDS, pagerank, pagerank_eval_fn, pagerank_step, top_k,
+    BACKENDS, pagerank, pagerank_eval_fn, pagerank_scrubbed,
+    pagerank_step, top_k,
 )

@@ -7,30 +7,101 @@ Unlike PageRank's numeric iterate, BFS state is *control* state: a flipped
 reached — distances don't self-heal. The Fig.2 campaign over
 ``bfs_eval_fn`` measures exactly that asymmetry between ``graph/frontier``
 and ``graph/rank`` tolerance.
+
+On node-blocked states the push is **frontier-sparse** by default: BFS
+frontiers are tiny for most levels of a power-law traversal, so instead
+of pushing the full dense vector every level, the per-source-block active
+mask is computed, only the edge tiles whose source bucket intersects the
+frontier are compacted (block-level skip), and the blocked kernel runs on
+just those tiles — tile counts are rounded up to the next power of two
+with inert sentinel tiles so the number of distinct kernel shapes stays
+O(log T). The level loop already syncs the host on frontier emptiness, so
+the mask readback adds no new synchronization point.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels import ops
-from repro.kernels.segsum import frontier_update, frontier_update_oracle
-from repro.graph.pagerank import _push
+from repro.graph.generate import node_block_of
+from repro.graph.pagerank import _push, _region_paths
+from repro.kernels.segsum import (edge_segment_push_blocked,
+                                  edge_segment_push_blocked_oracle,
+                                  edge_segment_push_blocked_ref,
+                                  frontier_update, frontier_update_oracle)
 
 
-def bfs_step(state: dict, level: int, *, backend: str = "pallas") -> dict:
+def active_src_blocks(frontier, node_block: int) -> jax.Array:
+    """(n_blocks,) bool: which node blocks hold at least one active
+    frontier node — the block-level skip mask of the sparse push."""
+    nb = frontier.shape[1] // node_block
+    return jnp.any(frontier.reshape(nb, node_block) > 0, axis=1)
+
+
+def _sparse_push(topo: dict, x, backend: str):
+    """Frontier-sparse blocked push: dispatch only the edge tiles whose
+    source bucket intersects the active frontier. Exactly equivalent to
+    the dense blocked push — skipped tiles would gather from all-zero
+    frontier slices and contribute exact zeros."""
+    blocks = topo["blocks"]
+    bn = node_block_of({"topology": topo})
+    n = x.shape[1]
+    nb = n // bn
+    sb_np = np.asarray(blocks["src_block"])
+    active = np.asarray(active_src_blocks(x, bn))
+    keep = active[np.clip(sb_np, 0, nb - 1)]
+    idx = np.nonzero(keep)[0]
+    if idx.size == 0:
+        return jnp.zeros_like(x)
+    t = sb_np.shape[0]
+    te = topo["src"].shape[0] // t
+    # round the kept-tile count up to the next power of two with inert
+    # sentinel tiles (all-sentinel edges, metadata copied from the last
+    # kept tile) so distinct kernel shapes stay O(log T)
+    p = 1 << (int(idx.size) - 1).bit_length()
+    pad = p - idx.size
+    gather = jnp.asarray(idx, jnp.int32)
+    src_sel = jnp.take(topo["src"].reshape(t, te), gather, axis=0)
+    dst_sel = jnp.take(topo["dst"].reshape(t, te), gather, axis=0)
+    sb_sel = jnp.take(blocks["src_block"], gather)
+    db_sel = jnp.take(blocks["dst_block"], gather)
+    if pad:
+        sentinel = jnp.full((pad, te), n, jnp.int32)
+        src_sel = jnp.concatenate([src_sel, sentinel])
+        dst_sel = jnp.concatenate([dst_sel, sentinel])
+        sb_sel = jnp.concatenate([sb_sel, jnp.repeat(sb_sel[-1:], pad)])
+        db_sel = jnp.concatenate([db_sel, jnp.repeat(db_sel[-1:], pad)])
+    args = (src_sel.reshape(-1), dst_sel.reshape(-1), sb_sel, db_sel, x)
+    if backend == "pallas":
+        return edge_segment_push_blocked(*args, node_block=bn)
+    if backend == "oracle":
+        return edge_segment_push_blocked_oracle(*args, node_block=bn)
+    if backend == "segment_sum":
+        return edge_segment_push_blocked_ref(*args, node_block=bn)
+    raise ValueError(backend)
+
+
+def bfs_step(state: dict, level: int, *, backend: str = "pallas",
+             sparse: Optional[bool] = None) -> dict:
     """Advance the frontier one level; returns the state with the
-    ``frontier`` group replaced."""
+    ``frontier`` group replaced. ``sparse=None`` enables frontier-sparse
+    dispatch automatically on node-blocked states."""
     topo = state["topology"]
     fr = state["frontier"]
-    pushed = _push(topo["src"], topo["dst"],
-                   fr["frontier"].astype(jnp.float32), backend)
+    blocked = "blocks" in topo
+    if sparse is None:
+        sparse = blocked
+    f32 = fr["frontier"].astype(jnp.float32)
+    if blocked and sparse:
+        pushed = _sparse_push(topo, f32, backend)
+    else:
+        pushed = _push(topo, f32, backend)
     if backend == "pallas":
         frontier, visited, dist = frontier_update(
-            pushed, fr["visited"], fr["dist"], level,
-            interpret=ops.INTERPRET)
+            pushed, fr["visited"], fr["dist"], level)
     else:
         frontier, visited, dist = frontier_update_oracle(
             pushed, fr["visited"], fr["dist"], level)
@@ -38,8 +109,8 @@ def bfs_step(state: dict, level: int, *, backend: str = "pallas") -> dict:
                                   "visited": visited, "dist": dist}}
 
 
-def bfs(state: dict, *, max_levels: int = 0, backend: str = "pallas"
-        ) -> Tuple[dict, jax.Array]:
+def bfs(state: dict, *, max_levels: int = 0, backend: str = "pallas",
+        sparse: Optional[bool] = None) -> Tuple[dict, jax.Array]:
     """Run BFS to exhaustion (or ``max_levels``) from the state's current
     frontier (seeded by ``graph_state(..., with_bfs=True, source=s)``).
 
@@ -48,16 +119,59 @@ def bfs(state: dict, *, max_levels: int = 0, backend: str = "pallas"
     n_pad = state["frontier"]["dist"].shape[1]
     levels = max_levels or n_pad
     for level in range(1, levels + 1):
-        state = bfs_step(state, level, backend=backend)
+        state = bfs_step(state, level, backend=backend, sparse=sparse)
         if not bool(jnp.any(state["frontier"]["frontier"] > 0)):
             break
     return state, state["frontier"]["dist"]
 
 
+_FRONTIER_PATHS = ("graph/frontier/frontier", "graph/frontier/visited",
+                   "graph/frontier/dist")
+
+
+def bfs_scrubbed(domain, *, max_levels: int = 0, backend: str = "pallas",
+                 sparse: Optional[bool] = None, scrub_slices: int = 8,
+                 regions: Iterable[str] = ("graph/topology",
+                                           "graph/rank")):
+    """BFS with protection overlapped off the critical path: after each
+    level the rewritten frontier sidecars are re-encoded and one
+    incremental scrub slice (``MemoryDomain.scrub_partial``) of the
+    long-lived regions runs, completing a full pass every
+    ``scrub_slices`` levels.
+
+    ``domain`` must protect a ``{"graph": graph_state(..., with_bfs)}``
+    payload. Returns (domain, dist, merged ScrubReport).
+    """
+    from repro.core.sidecar import ScrubReport
+    paths = _region_paths(domain, regions)
+    refresh_paths = [p for p in domain.paths(protected_only=True)
+                     if p in _FRONTIER_PATHS]
+    corrected: dict = {}
+    uncorrectable: dict = {}
+    n_pad = domain.payload["graph"]["frontier"]["dist"].shape[1]
+    levels = max_levels or n_pad
+    for level in range(1, levels + 1):
+        state = bfs_step(domain.payload["graph"], level, backend=backend,
+                         sparse=sparse)
+        domain = domain.refresh({**domain.payload, "graph": state},
+                                paths=refresh_paths)
+        domain, rep = domain.scrub_partial(level - 1, slices=scrub_slices,
+                                           paths=paths)
+        for k, v in rep.corrected.items():
+            corrected[k] = corrected.get(k, 0) + v
+        for k, v in rep.detected_uncorrectable.items():
+            uncorrectable[k] = uncorrectable.get(k, 0) + v
+        if not bool(jnp.any(
+                domain.payload["graph"]["frontier"]["frontier"] > 0)):
+            break
+    return (domain, domain.payload["graph"]["frontier"]["dist"],
+            ScrubReport(corrected=corrected,
+                        detected_uncorrectable=uncorrectable))
+
+
 def bfs_reference(g, source: int) -> jax.Array:
     """Plain-numpy CSR BFS oracle over a ``CSRGraph`` (in-edge CSR: we
     traverse by scanning rows for frontier sources)."""
-    import numpy as np
     n = g.n
     indptr, indices = g.indptr, g.indices
     dist = np.full(n, -1, np.int32)

@@ -151,13 +151,17 @@ def kvstore_workload(*, measure: bool = False, trials: int = 20,
 
 
 def graph_workload(*, measure: bool = False, trials: int = 20,
-                   n_nodes: int = 512, seed: int = 0) -> Workload:
+                   n_nodes: int = 512, seed: int = 0,
+                   node_block: Optional[int] = None) -> Workload:
     """Graph mining (PageRank over a power-law graph): profile measured
-    from a live graph ``MemoryDomain``."""
+    from a live graph ``MemoryDomain``. ``node_block`` builds the state
+    in the node-blocked layout (``--graph-node-block``), so the campaign
+    also covers the block-dispatch tables — structure whose corruption
+    drops or reroutes whole edge tiles."""
     from repro.core import HRMPolicy, MemoryDomain
     from repro.graph import graph_state, pagerank_eval_fn, powerlaw_graph
     g = powerlaw_graph(n_nodes, avg_degree=8, seed=seed)
-    state = graph_state(g, with_bfs=True)
+    state = graph_state(g, with_bfs=True, node_block=node_block)
     domain = MemoryDomain.protect({"graph": state},
                                   HRMPolicy("explore/graph", {}))
     profile = domain.region_profile()
@@ -356,6 +360,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--trials", type=int, default=20,
                     help="campaign trials per error kind (with --measure)")
     ap.add_argument("--graph-nodes", type=int, default=512)
+    ap.add_argument("--graph-node-block", type=int, default=None,
+                    metavar="BN",
+                    help="build the graph state in the node-blocked "
+                         "layout with this block size (multiple of 128); "
+                         "default: dense single-kernel layout")
     ap.add_argument("--availability-target", type=float, default=0.9990)
     ap.add_argument("--incorrect-target", type=float, default=12.0,
                     help="incorrect responses per million queries")
@@ -388,6 +397,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             kw = dict(measure=measure, trials=args.trials)
         if name == "graph":
             kw["n_nodes"] = n_nodes
+            kw["node_block"] = args.graph_node_block
         w = build_workload(name, **kw)
         rows = explore_workload(
             w, designs, availability_target=args.availability_target,

@@ -31,8 +31,9 @@ from repro.core.domain import (  # noqa: F401
     DomainSpec, DomainStats, LeafSpec, MemoryDomain,
 )
 from repro.core.availability import (  # noqa: F401
-    AvailabilityResult, VulnProfile, WEBSEARCH_VULN, evaluate_availability,
-    paper_design_availability, replay_availability,
+    AvailabilityResult, PEER_COPY_SECONDS, RECOVERY_SECONDS, VulnProfile,
+    WEBSEARCH_VULN, evaluate_availability, paper_design_availability,
+    replay_availability,
 )
 from repro.core.characterize import (  # noqa: F401
     CampaignResult, lm_eval_fn, run_campaign, run_trace_campaign,
@@ -53,10 +54,14 @@ from repro.core.injection import Injector  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     DESIGN_POINTS, HRMPolicy, REGIONS, burst_dr_l, classify_path,
     consumer_pc, detect_recover, detect_recover_l, dected_server,
-    less_tested, mirror_dr_l, typical_server,
+    less_tested, mirror_dr_l, peer_dr_l, typical_server,
 )
 from repro.core.recovery import (  # noqa: F401
     RecoveryManager, Response, RestartRequired, RetirementMap,
+    flagged_blocks,
+)
+from repro.core.sharded import (  # noqa: F401
+    ShardedMemoryDomain, ShardedScrubReport,
 )
 from repro.core.scrubber import Scrubber  # noqa: F401
 from repro.core.sidecar import (  # noqa: F401

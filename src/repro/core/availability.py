@@ -41,7 +41,15 @@ ERRORS_PER_SERVER_MONTH = 540.0
 LESS_TESTED_RATE_FACTOR = 1.5
 MULTI_BIT_FRACTION = 0.002
 CRASH_MTTR_MIN = 10.0          # restart + warmup
-RECOVERY_SECONDS = 2.0         # reload a region's clean copy
+RECOVERY_SECONDS = 2.0         # reload a region's clean copy from disk
+# in-memory gather from a live data-parallel replica (Response.PEER_COPY):
+# a cross-host device-to-device copy, ~40x cheaper than the disk reload
+# (arXiv:2309.00304's replication-aware recovery path)
+PEER_COPY_SECONDS = 0.05
+# fraction of detected-uncorrectable events where every replica of the
+# flagged shard is simultaneously dirty, forcing the disk fallback
+# (independent per-replica strike odds within one scrub interval)
+PEER_FALLBACK_FRACTION = 1e-3
 MINUTES_PER_MONTH = 30 * 24 * 60
 
 
@@ -63,16 +71,20 @@ WEBSEARCH_VULN = VulnProfile(
 class AvailabilityResult:
     name: str
     crashes_per_month: float
-    recoveries_per_month: float
+    recoveries_per_month: float     # disk reloads (RECOVERY_SECONDS each)
     incorrect_per_million: float
     downtime_min_per_month: float
     availability: float
+    # in-memory replica gathers (PEER_COPY_SECONDS each) — billed
+    # separately from disk reloads so peer recovery is visible in the row
+    peer_recoveries_per_month: float = 0.0
 
     def row(self) -> str:
         return (f"{self.name:18s} avail={self.availability:8.4%} "
                 f"crashes/mo={self.crashes_per_month:5.2f} "
                 f"incorrect/M={self.incorrect_per_million:5.2f} "
-                f"recoveries/mo={self.recoveries_per_month:7.1f}")
+                f"recoveries/mo={self.recoveries_per_month:7.1f} "
+                f"peer/mo={self.peer_recoveries_per_month:7.1f}")
 
 
 def evaluate_availability(name: str,
@@ -82,14 +94,30 @@ def evaluate_availability(name: str,
                           *,
                           less_tested: bool = False,
                           software_response: bool = True,
+                          peer_recovery: bool = False,
                           errors_per_month: float = ERRORS_PER_SERVER_MONTH,
                           tier_rates: Optional[Mapping[
                               Tier, TierOutcomeRates]] = None,
                           ) -> AvailabilityResult:
+    """``peer_recovery=True`` models a design with a live data-parallel
+    replica (``Response.PEER_COPY``): detected-uncorrectable software
+    recoveries are in-memory replica gathers charged ``PEER_COPY_SECONDS``
+    — except the ``PEER_FALLBACK_FRACTION`` where every replica of the
+    shard is dirty and the disk reload (``RECOVERY_SECONDS``) fires."""
     e_total = errors_per_month * (LESS_TESTED_RATE_FACTOR if less_tested
                                   else 1.0)
     crashes = 0.0
     recoveries = 0.0
+    peer_recoveries = 0.0
+
+    def _recover(detected: float) -> None:
+        nonlocal recoveries, peer_recoveries
+        if peer_recovery:
+            peer_recoveries += detected * (1.0 - PEER_FALLBACK_FRACTION)
+            recoveries += detected * PEER_FALLBACK_FRACTION
+        else:
+            recoveries += detected
+
     incorrect = 0.0
     for region, frac in profile.fractions.items():
         e = e_total * frac
@@ -101,7 +129,7 @@ def evaluate_availability(name: str,
             # measured branch: outcome rates from the tier's real kernels
             detected = e * rates.detected
             if software_response or tier == Tier.PARITY_R:
-                recoveries += detected   # Par+R always implies the reload
+                _recover(detected)       # Par+R always implies the reload
             else:
                 crashes += detected      # machine-check on typical HW
             consumed = e * rates.silent
@@ -109,12 +137,12 @@ def evaluate_availability(name: str,
             consumed = e
         elif tier == Tier.PARITY_R:
             detected = e * (1.0 - MULTI_BIT_FRACTION)
-            recoveries += detected
+            _recover(detected)
             consumed = e * MULTI_BIT_FRACTION
         elif tier == Tier.SECDED:
             ue = e * MULTI_BIT_FRACTION        # detected-uncorrectable
             if software_response:
-                recoveries += ue
+                _recover(ue)
             else:
                 crashes += ue                   # machine-check on typical HW
             consumed = 0.0
@@ -123,10 +151,11 @@ def evaluate_availability(name: str,
         crashes += consumed * pc
         incorrect += consumed * (1.0 - pc) * ri
     downtime = (crashes * CRASH_MTTR_MIN
-                + recoveries * RECOVERY_SECONDS / 60.0)
+                + recoveries * RECOVERY_SECONDS / 60.0
+                + peer_recoveries * PEER_COPY_SECONDS / 60.0)
     avail = 1.0 - downtime / MINUTES_PER_MONTH
     return AvailabilityResult(name, crashes, recoveries, incorrect,
-                              downtime, avail)
+                              downtime, avail, peer_recoveries)
 
 
 _HASH_MUL = np.uint64(0x9E3779B97F4A7C15)
@@ -182,6 +211,7 @@ def replay_availability(name: str,
                         trace,
                         *,
                         software_response: bool = True,
+                        peer_recovery: bool = False,
                         tier_rates: Optional[Mapping[
                             Tier, TierOutcomeRates]] = None,
                         seed: int = 0) -> AvailabilityResult:
@@ -208,7 +238,16 @@ def replay_availability(name: str,
     region_idx = np.searchsorted(cum, u_region, side="right")
     region_idx = np.minimum(region_idx, len(regions) - 1)
 
-    crashes = recoveries = incorrect = 0.0
+    crashes = recoveries = peer_recoveries = incorrect = 0.0
+
+    def _recover(detected: float) -> None:
+        nonlocal recoveries, peer_recoveries
+        if peer_recovery:
+            peer_recoveries += detected * (1.0 - PEER_FALLBACK_FRACTION)
+            recoveries += detected * PEER_FALLBACK_FRACTION
+        else:
+            recoveries += detected
+
     for i in range(len(trace)):
         region = regions[int(region_idx[i])]
         tier = tiers_by_region.get(region, Tier.NONE)
@@ -218,7 +257,7 @@ def replay_availability(name: str,
         if rates is not None:
             # measured branch: expectation-weighted kernel outcome rates
             if software_response or tier == Tier.PARITY_R:
-                recoveries += rates.detected
+                _recover(rates.detected)
             else:
                 crashes += rates.detected
             consumed = rates.silent
@@ -229,7 +268,7 @@ def replay_availability(name: str,
                 consumed = 1.0
             elif outcome == "detected":
                 if software_response or tier == Tier.PARITY_R:
-                    recoveries += 1.0
+                    _recover(1.0)
                 else:
                     crashes += 1.0
         crashes += consumed * pc
@@ -237,12 +276,14 @@ def replay_availability(name: str,
     months = max(trace.months, 1e-9)
     crashes /= months
     recoveries /= months
+    peer_recoveries /= months
     incorrect /= months
     downtime = (crashes * CRASH_MTTR_MIN
-                + recoveries * RECOVERY_SECONDS / 60.0)
+                + recoveries * RECOVERY_SECONDS / 60.0
+                + peer_recoveries * PEER_COPY_SECONDS / 60.0)
     avail = 1.0 - downtime / MINUTES_PER_MONTH
     return AvailabilityResult(name, crashes, recoveries, incorrect,
-                              downtime, avail)
+                              downtime, avail, peer_recoveries)
 
 
 def paper_design_availability(
@@ -256,7 +297,8 @@ def paper_design_availability(
     pinned paper numbers are untouched.
     """
     from repro.core.costmodel import (_LESS_TESTED, _MEASURED_ECC,
-                                      _PAPER_POLICIES, _SOFTWARE_RESPONSE)
+                                      _PAPER_POLICIES, _PEER_RECOVERY,
+                                      _SOFTWARE_RESPONSE)
     out = {}
     for name, pol in _PAPER_POLICIES.items():
         out[name] = evaluate_availability(
@@ -265,6 +307,7 @@ def paper_design_availability(
             # the homogeneous typical/less-tested servers have no software
             # response layer: an uncorrectable ECC error is a crash
             software_response=name in _SOFTWARE_RESPONSE,
+            peer_recovery=name in _PEER_RECOVERY,
             tier_rates=tier_rates if name in _MEASURED_ECC else None,
         )
     return out

@@ -62,15 +62,24 @@ _PAPER_POLICIES: Dict[str, Dict[str, Tier]] = {
                    "stack": Tier.BURST, "other": Tier.NONE},
     "mirror_dr_l": {"private": Tier.MIRROR, "heap": Tier.PARITY_R,
                     "stack": Tier.MIRROR, "other": Tier.NONE},
+    # replication-aware two-tier point (arXiv:2309.00304/2502.17138): a
+    # live data-parallel replica is the strong tier, so local ECC drops
+    # to cheap parity detect on every protected region (less-tested DRAM)
+    # and detected errors recover by in-memory peer copy, not disk
+    "peer_dr_l": {"private": Tier.PARITY_R, "heap": Tier.PARITY_R,
+                  "stack": Tier.PARITY_R, "other": Tier.NONE},
 }
 _LESS_TESTED = {"less_tested", "detect_recover_l", "burst_dr_l",
-                "mirror_dr_l"}
+                "mirror_dr_l", "peer_dr_l"}
 # design points with the software recovery layer (Table 2): a
 # detected-uncorrectable error is a clean-copy reload, not a machine check
 _SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc",
-                      "burst_dr_l", "mirror_dr_l"}
+                      "burst_dr_l", "mirror_dr_l", "peer_dr_l"}
 # design points whose ECC outcomes come from kernel measurement
 _MEASURED_ECC = {"dected_server", "burst_dr_l", "mirror_dr_l"}
+# design points whose software recoveries are in-memory replica gathers
+# (Response.PEER_COPY) billed PEER_COPY_SECONDS instead of a disk reload
+_PEER_RECOVERY = {"peer_dr_l"}
 
 
 def _tier_premium(tier: Tier) -> float:

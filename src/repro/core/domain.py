@@ -45,7 +45,8 @@ import numpy as np
 from repro.core.costmodel import RegionProfile
 from repro.core.errormodel import InjectionPlan
 from repro.core.policy import HRMPolicy, classify_path
-from repro.core.recovery import Response, RestartRequired, RetirementMap
+from repro.core.recovery import (Response, RestartRequired, RetirementMap,
+                                 flagged_blocks)
 from repro.core.sidecar import ScrubReport, _path_str
 from repro.core.tiers import Tier
 from repro.kernels import ops
@@ -643,6 +644,16 @@ class MemoryDomain:
                              "protected payload")
         return MemoryDomain(state, self.sidecar, self.hard_errors, self.spec)
 
+    def with_leaf(self, path: str, value) -> "MemoryDomain":
+        """Replace one payload leaf (its sidecar rows are stale until a
+        ``refresh(paths=[path])``) — the single-leaf write primitive the
+        sharded peer-copy recovery path builds on."""
+        s = self.spec.by_path[path]
+        leaves = self._leaves()
+        leaves[s.pos] = jnp.asarray(value).reshape(s.shape).astype(
+            jnp.dtype(s.dtype))
+        return self._rebuild(leaves)
+
     def refresh(self, state=None, *, paths: Optional[Iterable[str]] = None
                 ) -> "MemoryDomain":
         """Re-encode sidecars after legitimate writes (optimizer update,
@@ -789,18 +800,22 @@ class MemoryDomain:
             s = self.spec.by_path[path]
             if strikes is not None:
                 strikes[path] = strikes.get(path, 0) + 1
-            clean = jnp.asarray(clean_copy(path))
-            leaves[s.pos] = clean.reshape(s.shape).astype(
+            clean = jnp.asarray(clean_copy(path)).reshape(s.shape).astype(
                 jnp.dtype(s.dtype))
             action = ("peer_copy" if response is Response.PEER_COPY
                       else "reload_clean_copy")
             if strikes is not None and strikes[path] >= retire_after:
                 if retirement is not None:
-                    retirement.retire(path, strikes[path])
+                    # retire the actual damaged 512-byte blocks (diff of
+                    # the still-corrupted leaf vs its clean replacement),
+                    # not the strike count
+                    for block in flagged_blocks(leaves[s.pos], clean):
+                        retirement.retire(path, block)
                 # retired blocks are remapped: their sticky cells stop
                 # biting (page-offlining analogue)
                 hard_map.pop(path, None)
                 action += "+retire"
+            leaves[s.pos] = clean
             events.append({"action": action, "path": path,
                            "words": int(n_words)})
         dom = self._rebuild(leaves, hard_errors=hard_map)

@@ -187,6 +187,19 @@ def mirror_dr_l() -> HRMPolicy:
                      error_model=ErrorModel(less_tested=True))
 
 
+def peer_dr_l() -> HRMPolicy:
+    """Replication-aware two-tier HRM on less-tested devices
+    (arXiv:2309.00304 / arXiv:2502.17138): a live data-parallel replica is
+    the strong tier, so every region detect_recover_l protected drops to
+    cheap Par+R locally — detected errors recover by an in-memory peer
+    copy (``Response.PEER_COPY``, ``PEER_COPY_SECONDS``), falling back to
+    the disk reload only when all replicas of a shard are flagged."""
+    base = detect_recover_l()
+    tiers = {r: Tier.PARITY_R for r in base.tiers}
+    return HRMPolicy("peer_dr_l", tiers, default=Tier.NONE,
+                     error_model=ErrorModel(less_tested=True))
+
+
 DESIGN_POINTS = {
     "typical_server": typical_server,
     "consumer_pc": consumer_pc,
@@ -196,4 +209,5 @@ DESIGN_POINTS = {
     "dected_server": dected_server,
     "burst_dr_l": burst_dr_l,
     "mirror_dr_l": mirror_dr_l,
+    "peer_dr_l": peer_dr_l,
 }

@@ -42,6 +42,25 @@ class RestartRequired(RuntimeError):
     restart-from-checkpoint; the runtime loop catches it."""
 
 
+BLOCK_BYTES = 512
+
+
+def flagged_blocks(current, clean, *, block_bytes: int = BLOCK_BYTES
+                   ) -> List[int]:
+    """Indices of the ``block_bytes``-sized blocks whose bytes differ
+    between a flagged leaf and its clean replacement.
+
+    A detected-uncorrectable scrub leaves the faulty words in place (the
+    tier can flag but not fix them), so diffing against the clean copy at
+    recovery time recovers exactly the damaged 512-byte blocks — the ids
+    ``RetirementMap.retire`` expects."""
+    cur = np.ascontiguousarray(np.asarray(current))
+    ref = np.ascontiguousarray(
+        np.asarray(clean).reshape(cur.shape).astype(cur.dtype))
+    diff = cur.view(np.uint8).ravel() != ref.view(np.uint8).ravel()
+    return sorted({int(i) // block_bytes for i in np.nonzero(diff)[0]})
+
+
 @dataclass
 class RetirementMap:
     """Per-leaf retired-block bitmap (512-byte blocks)."""
@@ -81,14 +100,17 @@ class RecoveryManager:
         for path, n in needs.items():
             self.strike_counts[path] = self.strike_counts.get(path, 0) + 1
             clean = self.clean_copy(path)
-            state = _set_leaf(state, path, clean)
             action = ("peer_copy" if self.response == Response.PEER_COPY
                       else "reload_clean_copy")
             if self.strike_counts[path] >= self.retire_after:
-                # recurring errors at the same leaf: retire its blocks so
-                # the hard fault stops re-biting (page-offlining analogue)
-                self.retirement.retire(path, self.strike_counts[path])
+                # recurring errors at the same leaf: retire its faulty
+                # 512-byte blocks (diffed against the clean copy) so the
+                # hard fault stops re-biting (page-offlining analogue)
+                cur = leaf_index(state, root)[path]["leaf"]
+                for block in flagged_blocks(cur, clean):
+                    self.retirement.retire(path, block)
                 action += "+retire"
+            state = _set_leaf(state, path, clean)
             self.events.append({"action": action, "path": path,
                                 "words": int(n)})
             scrubber.refresh(state, paths=[path])

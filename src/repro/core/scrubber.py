@@ -17,6 +17,7 @@ sweeps.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -36,7 +37,14 @@ class Scrubber:
     @classmethod
     def create(cls, state, policy: HRMPolicy, root: str = "params",
                stride: int = 1) -> "Scrubber":
-        return cls(policy, build_sidecar(state, policy, root), root, stride)
+        warnings.warn(
+            "Scrubber is the legacy per-leaf driver; use "
+            "repro.core.domain.MemoryDomain (scrub/refresh) instead",
+            DeprecationWarning, stacklevel=2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            sidecar = build_sidecar(state, policy, root)
+        return cls(policy, sidecar, root, stride)
 
     def _subset(self) -> Dict:
         if self.stride <= 1:
@@ -55,8 +63,11 @@ class Scrubber:
 
     def scrub_now(self, state) -> Tuple[object, ScrubReport]:
         subset = self._subset()
-        state, new_entries, report = scrub(state, subset, self.policy,
-                                           self.root)
+        with warnings.catch_warnings():
+            # the shim warned once at create; don't re-warn per pass
+            warnings.simplefilter("ignore", DeprecationWarning)
+            state, new_entries, report = scrub(state, subset, self.policy,
+                                               self.root)
         self.sidecar.update(new_entries)
         self._pass_idx += 1
         self.history.append(report.totals())
@@ -65,7 +76,9 @@ class Scrubber:
     def refresh(self, state, paths=None) -> None:
         """Re-encode sidecar entries after legitimate writes (e.g. after an
         optimizer update or a clean-copy reload)."""
-        fresh = build_sidecar(state, self.policy, self.root)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            fresh = build_sidecar(state, self.policy, self.root)
         if paths is None:
             self.sidecar = fresh
         else:

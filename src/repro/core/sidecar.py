@@ -29,8 +29,9 @@ arrays, the report a dict of scalar counts.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Iterable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,10 @@ def leaf_index(state, root: str = "params") -> Dict[str, Dict[str, Any]]:
 
 def build_sidecar(state, policy: HRMPolicy, root: str = "params"
                   ) -> PathEntries:
+    warnings.warn(
+        "build_sidecar is the legacy per-leaf path; use "
+        "repro.core.domain.MemoryDomain.protect instead",
+        DeprecationWarning, stacklevel=2)
     sc: PathEntries = {}
     for pstr, info in leaf_index(state, root).items():
         tier = policy.tier_of(info["region"])
@@ -107,6 +112,22 @@ class ScrubReport:
              for k in keys]))
         return {k: int(n) for k, n in zip(keys, counts) if n > 0}
 
+    @classmethod
+    def merged(cls, reports: Iterable["ScrubReport"]) -> "ScrubReport":
+        """Aggregate per-shard (or per-replica) reports into one: counts
+        sum per path, so sharded scrubs fold into the exact domain-level
+        report a single-device scrub would produce. Counts fold on the
+        host (the inputs may live on different devices of a mesh)."""
+        corr: Dict[str, Any] = {}
+        unc: Dict[str, Any] = {}
+        for rep in reports:
+            for out, src in ((corr, rep.corrected),
+                             (unc, rep.detected_uncorrectable)):
+                for k, v in src.items():
+                    n = int(np.asarray(v))
+                    out[k] = n if k not in out else out[k] + n
+        return cls(corrected=corr, detected_uncorrectable=unc)
+
 
 def _set_leaf(state, pstr: str, value):
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
@@ -120,6 +141,10 @@ def scrub(state, sidecar: PathEntries, policy: HRMPolicy,
           root: str = "params"):
     """Verify + correct every protected leaf. Returns (state', sidecar',
     ScrubReport)."""
+    warnings.warn(
+        "scrub is the legacy per-leaf path; use "
+        "repro.core.domain.MemoryDomain.scrub instead",
+        DeprecationWarning, stacklevel=2)
     report = ScrubReport()
     idx = leaf_index(state, root)
     new_leaves: Dict[str, Any] = {}

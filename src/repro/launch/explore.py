@@ -3,11 +3,17 @@ pricing HRM over every workload the repo serves.
 
 Sweeps {websearch, kvstore, graph} x {typical_server, consumer_pc,
 detect_recover, less_tested, detect_recover_l, dected_server, burst_dr_l,
-autopolicy} and emits one Fig.5-style table per workload: relative memory
-cost (the capacity premium), memory/server savings, availability, crashes
-and incorrect responses per month — driving the measured-mode cost model
-(``core.costmodel``), the availability model (``core.availability``) and
-the policy auto-tuner (``core.autopolicy``) from one place.
+mirror_dr_l, peer_dr_l, autopolicy} and emits one Fig.5-style table per
+workload: relative memory cost (the capacity premium), memory/server
+savings, availability, crashes and incorrect responses per month — driving
+the measured-mode cost model (``core.costmodel``), the availability model
+(``core.availability``) and the policy auto-tuner (``core.autopolicy``)
+from one place.
+
+The replication-aware ``peer_dr_l`` point (arXiv:2309.00304 /
+arXiv:2502.17138) recovers detections from a live data-parallel replica
+(``Response.PEER_COPY``): its table row bills the in-memory peer-copy
+MTTR separately from disk reloads (the ``peer/mo`` column).
 
 The strong-ECC design points (``dected_server``, ``burst_dr_l``) do not
 reuse the calibrated ECC outcome constants: their per-tier outcome rates
@@ -48,14 +54,18 @@ from repro.core.tiers import Tier
 WORKLOADS = ("websearch", "kvstore", "graph")
 DESIGNS = ("typical_server", "consumer_pc", "detect_recover",
            "less_tested", "detect_recover_l", "dected_server",
-           "burst_dr_l", "mirror_dr_l", "autopolicy")
+           "burst_dr_l", "mirror_dr_l", "peer_dr_l", "autopolicy")
 # design points with a software recovery layer (Table 2); on the others an
 # uncorrectable ECC error is a machine-check crash (the auto-tuned point
 # always assumes the software layer and is handled separately)
 _SOFTWARE_RESPONSE = {"detect_recover", "detect_recover_l", "consumer_pc",
-                      "burst_dr_l", "mirror_dr_l"}
+                      "burst_dr_l", "mirror_dr_l", "peer_dr_l"}
 # design points whose ECC outcomes are measured through the real kernels
 MEASURED_ECC_DESIGNS = {"dected_server", "burst_dr_l", "mirror_dr_l"}
+# design points recovering from a live data-parallel replica
+# (Response.PEER_COPY): detections are billed the in-memory peer-copy
+# MTTR, not the disk reload (core.availability.PEER_COPY_SECONDS)
+PEER_RECOVERY_DESIGNS = {"peer_dr_l"}
 
 
 def _measured_rates():
@@ -99,11 +109,15 @@ class ExploreRow:
     incorrect_per_million: float
     recoveries_per_month: float
     ecc_source: str = "calibrated"
+    # in-memory replica gathers (PEER_COPY-recovering designs): charged
+    # PEER_COPY_SECONDS each, separately from disk recoveries
+    peer_recoveries_per_month: float = 0.0
 
     _FMT = ("{design:18s} {memory_cost_rel:8.3f} {memory_saving:9.2%} "
             "{server_saving:9.2%} {availability:9.4%} "
             "{crashes_per_month:9.2f} {incorrect_per_million:6.2f} "
-            "{recoveries_per_month:9.1f} {ecc_source:>10s}")
+            "{recoveries_per_month:9.1f} {peer_recoveries_per_month:9.1f} "
+            "{ecc_source:>10s}")
 
     def row(self) -> str:
         return self._FMT.format(**vars(self))
@@ -256,7 +270,8 @@ def explore_workload(w: Workload, designs: List[str], *,
             rows.append(ExploreRow(
                 w.name, name, c.memory_cost_rel, c.memory_saving,
                 c.server_saving, a.availability, a.crashes_per_month,
-                a.incorrect_per_million, a.recoveries_per_month, source))
+                a.incorrect_per_million, a.recoveries_per_month, source,
+                a.peer_recoveries_per_month))
             continue
         policy = DESIGN_POINTS[name]()
         cost = policy_cost_saving(policy, w.profile)
@@ -265,11 +280,13 @@ def explore_workload(w: Workload, designs: List[str], *,
             name, tiers, w.profile, w.vuln,
             less_tested=policy.error_model.less_tested,
             software_response=name in _SOFTWARE_RESPONSE,
+            peer_recovery=name in PEER_RECOVERY_DESIGNS,
             tier_rates=rates if name in MEASURED_ECC_DESIGNS else None)
         rows.append(ExploreRow(
             w.name, name, cost.memory_cost_rel, cost.memory_saving,
             cost.server_saving, a.availability, a.crashes_per_month,
-            a.incorrect_per_million, a.recoveries_per_month, source))
+            a.incorrect_per_million, a.recoveries_per_month, source,
+            a.peer_recoveries_per_month))
     return rows
 
 
@@ -325,18 +342,21 @@ def explore_workload_trace(w: Workload, designs: List[str], trace, *,
         a = replay_availability(
             name, _design_tiers(name, w), w.profile, w.vuln, trace,
             software_response=name in _SOFTWARE_RESPONSE,
+            peer_recovery=name in PEER_RECOVERY_DESIGNS,
             tier_rates=rates if name in MEASURED_ECC_DESIGNS else None,
             seed=seed)
         rows.append(ExploreRow(
             w.name, name, cost_rel, mem_save, srv_save, a.availability,
             a.crashes_per_month, a.incorrect_per_million,
-            a.recoveries_per_month, "trace"))
+            a.recoveries_per_month, "trace",
+            a.peer_recoveries_per_month))
     return rows
 
 
 _HEADER = (f"{'design':18s} {'mem_cost':>8s} {'mem_save':>9s} "
            f"{'srv_save':>9s} {'avail':>9s} {'crash/mo':>9s} "
-           f"{'bad/M':>6s} {'recov/mo':>9s} {'ecc_src':>10s}")
+           f"{'bad/M':>6s} {'recov/mo':>9s} {'peer/mo':>9s} "
+           f"{'ecc_src':>10s}")
 
 
 def format_table(w: Workload, rows: List[ExploreRow]) -> str:

@@ -18,6 +18,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_domain_mesh(n_replicas: int = 2, n_shards: int = 2):
+    """Small (data, model) mesh for sharded memory domains
+    (``core.sharded.ShardedMemoryDomain``): ``data`` carries the
+    data-parallel replicas (the PEER_COPY donors), ``model`` the leaf
+    shards. Needs ``n_replicas * n_shards`` devices — the CI smoke forces
+    them with ``XLA_FLAGS=--xla_force_host_platform_device_count``."""
+    return jax.make_mesh((n_replicas, n_shards), ("data", "model"))
+
+
 def make_mesh(mesh_cfg: MeshConfig):
     return jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes)
 

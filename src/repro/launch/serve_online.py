@@ -51,6 +51,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="tier over the paged KV pools")
     ap.add_argument("--storm-errors", type=int, default=0,
                     help="server-month error budget compressed into the run")
+    ap.add_argument("--peer-recovery", action="store_true",
+                    help="recover detected-uncorrectable errors from a "
+                         "live data-parallel replica (in-memory gather, "
+                         "peer-copy MTTR) instead of the disk reload")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="replay a recorded error trace (.npz from "
                          "repro.core.tracegen) instead of the Poisson "
@@ -96,7 +100,8 @@ def main(argv=None):
         storm = (f"trace:{args.trace}" if args.trace
                  else f"{args.storm_errors} errors")
         print(f"reliability: params={args.policy or 'none'} "
-              f"kv={kv_tier.value} storm={storm}")
+              f"kv={kv_tier.value} storm={storm}"
+              f"{' peer-recovery' if args.peer_recovery else ''}")
         return 0
 
     import jax
@@ -112,7 +117,8 @@ def main(argv=None):
             n_pages=args.pages, policy=policy, kv_tier=kv_tier,
             scrub_every=args.scrub_every, clock=args.clock,
             max_prefills_per_step=args.max_prefills,
-            max_queue=args.max_queue, seed=args.seed)
+            max_queue=args.max_queue, peer_recovery=args.peer_recovery,
+            seed=args.seed)
 
     error_trace = None
     if args.trace:

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import HRMPolicy, MemoryDomain, Tier
+from repro.core import HRMPolicy, MemoryDomain, Response, Tier
 from repro.core.availability import MINUTES_PER_MONTH
 from repro.core.trace import BoundStrike, ErrorTrace, bind_trace
 from repro.models import forward
@@ -223,11 +223,21 @@ class OnlineEngine:
                  service: Optional[ServiceModel] = None,
                  max_prefills_per_step: int = 2,
                  max_queue: Optional[int] = None,
+                 peer_recovery: bool = False,
                  debug_invariants: bool = False,
                  seed: int = 0):
         self.cfg = cfg
         self.params_policy = policy
         self.kv_tier = kv_tier
+        # replicated-engine mode: this engine is one data-parallel replica
+        # of a fleet, so detected-uncorrectable errors recover by an
+        # in-memory gather from a live replica (Response.PEER_COPY, billed
+        # PEER_COPY_SECONDS) instead of the disk reload. The peer's params
+        # image is the replica-identical clean copy; the KV pools keep a
+        # post-refresh peer snapshot (the replica that didn't take the
+        # strike) so flagged pool leaves recover in memory too.
+        self.peer_recovery = peer_recovery
+        self._kv_peer: Optional[Dict[str, jax.Array]] = None
         self.clock_mode = clock
         self.service = service or ServiceModel()
         self.max_prefills_per_step = max_prefills_per_step
@@ -340,16 +350,38 @@ class OnlineEngine:
         counters.params_detected += u
         needs = rep.needs_recovery()
         if needs:
+            # peer mode: params are data-parallel-replicated, so the
+            # in-memory clean copy *is* the peer replica's image — same
+            # bits as the disk reload, but billed at the peer-copy MTTR
+            resp = (Response.PEER_COPY if self.peer_recovery
+                    else Response.RELOAD_CLEAN_COPY)
             self.param_domain, events = self.param_domain.recover(
-                rep, clean_copy=lambda p: self._clean[p], needs=needs)
-            counters.charge_recoveries(len(events))
+                rep, clean_copy=lambda p: self._clean[p], response=resp,
+                needs=needs)
+            n_peer = sum(1 for e in events
+                         if e["action"].startswith("peer_copy"))
+            counters.charge_peer_recoveries(n_peer)
+            counters.charge_recoveries(len(events) - n_peer)
 
     def _scrub_kv(self, counters: SLOCounters) -> None:
         self.kv_domain, rep = self.kv_domain.scrub()
         c, u = rep.totals()
         counters.kv_corrected += c
         counters.kv_detected += u
-        if c:                            # SEC-DED repaired pool words
+        changed = bool(c)                # SEC-DED repaired pool words
+        needs = rep.needs_recovery()
+        if self.peer_recovery and needs and self._kv_peer is not None:
+            # the peer snapshot is the post-refresh pool image — the
+            # state a replica that didn't take this storm's strikes
+            # holds — so the gather restores flagged pool leaves
+            # bit-identically without a disk round-trip
+            peer = self._kv_peer
+            self.kv_domain, events = self.kv_domain.recover(
+                rep, clean_copy=lambda p: peer[p],
+                response=Response.PEER_COPY, needs=needs)
+            counters.charge_peer_recoveries(len(events))
+            changed = True
+        if changed:
             kv = self.kv_domain.payload["kv_cache"]
             self.cache.adopt_pools(kv["k"], kv["v"])
 
@@ -374,6 +406,7 @@ class OnlineEngine:
                                jnp.zeros_like(self.cache.pool_v))
         self.kv_domain = MemoryDomain.protect(self._kv_state(),
                                               kv_policy(self.kv_tier))
+        self._kv_peer = None             # stale after the restart
 
     # ---------------------------------------------------------------- run
     def run(self, trace: List[Request], *, storm_errors: int = 0,
@@ -473,6 +506,11 @@ class OnlineEngine:
                 self.kv_domain = self.kv_domain.refresh(self._kv_state())
             else:
                 self.kv_domain = self.kv_domain.adopt(self._kv_state())
+            if self.peer_recovery:
+                # peer image: a replica that doesn't take this storm's
+                # strikes holds exactly this post-write pool state
+                self._kv_peer = {"kv_cache/k": self.cache.pool_k,
+                                 "kv_cache/v": self.cache.pool_v}
             # 6. the storm: fire every error due by the current clock
             while storm and storm[0][0] <= now:
                 _, strike = storm.popleft()

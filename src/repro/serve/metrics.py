@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.availability import (CRASH_MTTR_MIN, MINUTES_PER_MONTH,
-                                     RECOVERY_SECONDS)
+                                     PEER_COPY_SECONDS, RECOVERY_SECONDS)
 
 
 def percentile(xs: Sequence[float], p: float) -> float:
@@ -38,12 +38,19 @@ class SLOCounters:
     kv_corrected: int = 0
     kv_detected: int = 0
     recovery_events: int = 0
+    peer_recovery_events: int = 0
     crash_events: int = 0
     downtime_seconds: float = 0.0
 
     def charge_recoveries(self, n: int) -> None:
         self.recovery_events += n
         self.downtime_seconds += n * RECOVERY_SECONDS
+
+    def charge_peer_recoveries(self, n: int) -> None:
+        """In-memory replica gathers (Response.PEER_COPY): billed the
+        peer-copy MTTR, NOT the disk-reload RECOVERY_SECONDS."""
+        self.peer_recovery_events += n
+        self.downtime_seconds += n * PEER_COPY_SECONDS
 
     def charge_crash(self) -> None:
         self.crash_events += 1

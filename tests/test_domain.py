@@ -8,9 +8,10 @@ import pytest
 
 from repro.configs import get_tiny
 from repro.configs.base import TrainConfig
-from repro.core import (HRMPolicy, MemoryDomain, REGIONS, Response,
-                        RestartRequired, RetirementMap, Tier, build_sidecar,
-                        detect_recover, scrub, typical_server)
+from repro.core import (HRMPolicy, InjectionPlan, MemoryDomain, REGIONS,
+                        Response, RestartRequired, RetirementMap, Tier,
+                        build_sidecar, detect_recover, scrub,
+                        typical_server)
 from repro.core.domain import DomainSpec
 from repro.models import init_params
 from repro.runtime.steps import init_train_state
@@ -77,6 +78,31 @@ def test_multi_root_recover_restart_and_retire(train_state):
     assert any("retire" in e["action"] for e in events)
     assert retirement.count() >= 1
     assert not recovered.hard_errors          # sticky cells gone
+
+
+def test_retirement_retires_actual_damaged_blocks(params):
+    """Escalated recovery must retire the 512-byte block ids of the
+    *damaged bytes* (diff of the flagged leaf vs its clean copy), not the
+    strike count — the old code handed ``retire`` the counter value."""
+    policy = HRMPolicy("par_all", {}, default=Tier.PARITY_R)
+    dom = MemoryDomain.protect(params, policy)
+    path = max(dom.paths(), key=lambda p: np.asarray(dom.leaf(p)).nbytes)
+    assert np.asarray(dom.leaf(path)).nbytes >= 3 * 512
+    # single-bit (odd) flips in packed 64-bit words 0 and 130: parity
+    # detects but cannot correct, so bytes 0..7 and 1040..1047 stay
+    # corrupted -> the damaged 512-byte blocks are exactly {0, 2}
+    plan = InjectionPlan(np.array([0, 130], np.int32),
+                         np.array([0, 5], np.int32), hard=False)
+    bad = dom.apply_plan(path, plan)
+    _, report = bad.scrub()
+    assert path in report.needs_recovery()
+    clean = {p: dom.leaf(p) for p in dom.paths()}
+    retirement = RetirementMap()
+    _, events = bad.recover(report, clean_copy=lambda p: clean[p],
+                            strikes={path: 2}, retirement=retirement,
+                            retire_after=3)
+    assert any(e["action"].endswith("+retire") for e in events)
+    assert sorted(retirement.blocks[path]) == [0, 2]
 
 
 # --------------------------------- equivalence vs the legacy per-leaf path

@@ -50,6 +50,37 @@ def test_explorer_websearch_column_reproduces_paper():
     assert rows["typical_server"].memory_saving == pytest.approx(0.0)
 
 
+def test_peer_dr_l_replication_aware_recovery():
+    """peer_dr_l: Par+R over every region + live-replica recovery.
+    Cheaper memory than detect_recover_l AND above the availability bar,
+    because recoveries are in-memory peer gathers (PEER_COPY_SECONDS)
+    instead of disk reloads (RECOVERY_SECONDS)."""
+    costs = paper_design_costs()
+    avail = paper_design_availability()
+    assert costs["peer_dr_l"].memory_saving > \
+        costs["detect_recover_l"].memory_saving
+    assert costs["peer_dr_l"].server_saving > \
+        costs["detect_recover_l"].server_saving
+    a = avail["peer_dr_l"]
+    assert a.availability >= 0.9990
+    # the recovery split: nearly all events take the in-memory peer path;
+    # disk reloads fire only on the all-replicas-flagged fallback
+    assert a.peer_recoveries_per_month > 0
+    assert a.recoveries_per_month < 0.01 * a.peer_recoveries_per_month
+    # disk-recovery designs never bill the peer path
+    assert avail["detect_recover_l"].peer_recoveries_per_month == 0.0
+
+
+def test_explorer_reports_peer_dr_l_row():
+    rows = _by_design(explore_workload(websearch_workload(), list(DESIGNS)))
+    peer = rows["peer_dr_l"]
+    assert peer.availability >= 0.9990
+    assert peer.peer_recoveries_per_month > 0
+    assert peer.memory_saving > rows["detect_recover_l"].memory_saving
+    assert rows["detect_recover_l"].peer_recoveries_per_month == 0.0
+    assert "peer_dr_l" in format_table(websearch_workload(), [peer])
+
+
 # ------------------------------------------------------ graph workload
 @pytest.fixture(scope="module")
 def graph_rows():

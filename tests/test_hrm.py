@@ -52,7 +52,8 @@ def test_design_points_all_defined():
     assert set(DESIGN_POINTS) == {"typical_server", "consumer_pc",
                                   "detect_recover", "less_tested",
                                   "detect_recover_l", "dected_server",
-                                  "burst_dr_l", "mirror_dr_l"}
+                                  "burst_dr_l", "mirror_dr_l",
+                                  "peer_dr_l"}
     # the strong-ECC extensions use the true multi-bit codes everywhere
     # they protect
     assert set(DESIGN_POINTS["dected_server"]().tiers.values()) == {

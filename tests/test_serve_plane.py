@@ -152,6 +152,38 @@ def test_slo_under_storm_meets_availability_bar(params):
     assert 0.0 <= rep.incorrect_rate <= 1.0
 
 
+def test_peer_recovery_billed_as_peer_not_disk(params):
+    """peer_recovery=True: every detected-uncorrectable recovery takes
+    the in-memory replica path — counted as ``peer_recovery_events`` and
+    billed ``PEER_COPY_SECONDS`` each, never as a disk reload
+    (regression: peer copies used to be indistinguishable from
+    ``reload_clean_copy`` in the availability accounting)."""
+    from repro.core.availability import (CRASH_MTTR_MIN, PEER_COPY_SECONDS,
+                                         RECOVERY_SECONDS)
+    tc = TrafficConfig(n_requests=12, rate=40.0, seed=3)
+    trace = generate_trace(tc, CFG.vocab_size)
+
+    def engine(**kw):
+        return OnlineEngine(CFG, params, slots=3, page_size=8,
+                            max_prompt_len=tc.max_prompt_len,
+                            max_new_cap=tc.max_new_cap, seed=1,
+                            policy=DESIGN_POINTS["peer_dr_l"](),
+                            kv_tier=Tier.PARITY_R, scrub_every=4, **kw)
+
+    disk, _ = engine().run(trace, storm_errors=300)
+    peer, _ = engine(peer_recovery=True).run(trace, storm_errors=300)
+    assert disk.counters["recovery_events"] > 0
+    assert disk.counters["peer_recovery_events"] == 0
+    assert peer.counters["peer_recovery_events"] > 0
+    assert peer.counters["recovery_events"] == 0
+    # the measured downtime is crashes + peer copies at the peer MTTR —
+    # no RECOVERY_SECONDS term anywhere
+    expect = (peer.counters["crash_events"] * CRASH_MTTR_MIN * 60.0
+              + peer.counters["peer_recovery_events"] * PEER_COPY_SECONDS)
+    assert peer.counters["downtime_seconds"] == pytest.approx(expect)
+    assert PEER_COPY_SECONDS < RECOVERY_SECONDS
+
+
 def test_engine_unprotected_params_storm_runs(params):
     """No policy at all: injections land unrepaired; the engine must
     still finish (crash/requeue path) and report availability <= 1."""

@@ -1,0 +1,272 @@
+"""Sharded multi-device domains: bit-identity of the per-shard scrub +
+aggregated report vs the single-device domain, replication-aware
+PEER_COPY recovery (in-memory donor gather, disk fallback, per-replica
+retirement), and the deprecation contract of the legacy per-leaf shims.
+
+Virtual mode (no mesh) runs the identical replica x shard structure on
+one device, which is what makes in-process equivalence checks exact; the
+mesh-placed path is exercised by examples/sharded_domain.py under
+``XLA_FLAGS=--xla_force_host_platform_device_count`` (the CI smoke).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.core import (HRMPolicy, InjectionPlan, MemoryDomain,
+                        RestartRequired, Response, RetirementMap, Scrubber,
+                        ShardedMemoryDomain, Tier, build_sidecar, scrub,
+                        typical_server)
+from repro.models import init_params
+
+PAR_ALL = lambda: HRMPolicy("par_all", {}, default=Tier.PARITY_R)  # noqa: E731
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), get_tiny("llama3-8b"))
+
+
+def _equal_trees(a, b) -> bool:
+    same = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y)), a, b)
+    return all(jax.tree.leaves(same))
+
+
+def _strike_plans(dom, n=4, seed=7):
+    """Deterministic single-bit plans on the ``n`` largest protected
+    leaves (leaf-local 64-bit-word indices, so the identical plan hits
+    the identical bits on sharded and unsharded domains)."""
+    rng = np.random.default_rng(seed)
+    paths = sorted(dom.paths(protected_only=True),
+                   key=lambda p: (-np.asarray(dom.leaf(p)).nbytes, p))[:n]
+    plans = []
+    for p in paths:
+        n64 = max(1, np.asarray(dom.leaf(p)).nbytes // 8)
+        plans.append((p, InjectionPlan(
+            np.array([int(rng.integers(0, n64))], np.int32),
+            np.array([int(rng.integers(0, 64))], np.int32), hard=False)))
+    return plans
+
+
+# ------------------------------------------------- structure + partition
+def test_state_roundtrip_and_partition(params):
+    sh = ShardedMemoryDomain.protect(params, typical_server(),
+                                     n_replicas=2, n_shards=3)
+    assert sh.n_replicas == 2 and sh.n_shards == 3
+    # every leaf lands on exactly one shard; reassembly is the original
+    single = MemoryDomain.protect(params, typical_server())
+    assert sorted(sh.shard_of) == sorted(single.paths())
+    assert set(sh.shard_of.values()) == set(range(3))
+    assert _equal_trees(sh.state(0), params)
+    assert _equal_trees(sh.state(1), params)
+    # region/tier classification survives the path reconstruction
+    for p in single.paths():
+        assert sh.region_of(p) == single.region_of(p)
+        assert sh.tier_of(p) is single.tier_of(p)
+    assert sh.paths(protected_only=True) == \
+        single.paths(protected_only=True)
+
+
+def test_partition_is_byte_balanced(params):
+    sh = ShardedMemoryDomain.protect(params, typical_server(), n_shards=3,
+                                     n_replicas=1)
+    loads = [0] * 3
+    for p, s in sh.shard_of.items():
+        loads[s] += np.asarray(sh.leaf(p)).nbytes
+    # greedy largest-first keeps every shard within the largest leaf of
+    # the mean load
+    biggest = max(np.asarray(sh.leaf(p)).nbytes for p in sh.shard_of)
+    assert max(loads) - min(loads) <= biggest
+
+
+# --------------------------------------------- scrub equivalence + report
+@pytest.mark.parametrize("policy_fn", [typical_server, PAR_ALL])
+def test_sharded_scrub_bit_identical_to_single_device(params, policy_fn):
+    """Same strikes, per-shard scrub + merged report vs the unsharded
+    domain: identical recovered payload, identical per-path counts."""
+    single = MemoryDomain.protect(params, policy_fn())
+    sh = ShardedMemoryDomain.protect(params, policy_fn(),
+                                     n_replicas=2, n_shards=3)
+    for p, plan in _strike_plans(single):
+        single = single.apply_plan(p, plan)
+        sh = sh.apply_plan(p, plan, replica=0)
+
+    single_fixed, s_rep = single.scrub()
+    sh_fixed, rep = sh.scrub()
+    assert _equal_trees(sh_fixed.state(0), single_fixed.payload)
+    assert _equal_trees(sh_fixed.state(1), params)   # replica 1 untouched
+    # the aggregated domain-level report carries exactly the single
+    # domain's counts (replica 1 is clean, so it adds zeros)
+    agg = rep.domain_report()
+    assert agg.totals() == s_rep.totals()
+    assert rep.totals() == s_rep.totals()
+    for p in single.paths(protected_only=True):
+        assert int(np.asarray(agg.corrected.get(p, 0))) == \
+            int(np.asarray(s_rep.corrected.get(p, 0)))
+        assert int(np.asarray(agg.detected_uncorrectable.get(p, 0))) == \
+            int(np.asarray(s_rep.detected_uncorrectable.get(p, 0)))
+    assert rep.needs_recovery().get(0, {}) == s_rep.needs_recovery()
+    assert 1 not in rep.needs_recovery()
+    # per-shard sub-reports partition the counts without loss
+    c_cells = sum(r.totals()[0] for row in rep.per_shard for r in row)
+    assert c_cells == s_rep.totals()[0]
+
+
+def test_scrub_schedule_gate(params):
+    policy = typical_server()
+    object.__setattr__(policy, "scrub_interval", 10)
+    sh = ShardedMemoryDomain.protect(params, policy, n_replicas=1,
+                                     n_shards=2)
+    _, rep = sh.scrub(step=3)
+    assert rep is None
+    _, rep = sh.scrub(step=20)
+    assert rep is not None
+
+
+def test_subset_scrub_only_touches_selected_shards(params):
+    sh = ShardedMemoryDomain.protect(params, typical_server(),
+                                     n_replicas=1, n_shards=3)
+    path = sh.paths(protected_only=True)[0]
+    _, rep = sh.scrub(paths=[path])
+    agg = rep.domain_report()
+    assert set(agg.corrected) == {path}
+
+
+# --------------------------------------------- replication-aware recovery
+def test_peer_copy_recovers_bit_identical_to_disk(params):
+    """The in-memory donor gather restores the exact bytes the disk
+    reload would — and names its donor replica in the event."""
+    sh = ShardedMemoryDomain.protect(params, PAR_ALL(),
+                                     n_replicas=2, n_shards=3)
+    struck = []
+    for p, plan in _strike_plans(sh):
+        sh = sh.apply_plan(p, plan, replica=0)
+        struck.append(p)
+    sh, rep = sh.scrub()
+    needs = rep.needs_recovery()
+    assert set(needs) == {0} and set(needs[0]) == set(struck)
+
+    # disk path on a parallel copy of the same flagged domain
+    clean = {p: np.asarray(jax.tree_util.tree_leaves(params)[i])
+             for i, p in enumerate(sh.order)}
+    disk, d_events = sh.recover(rep, clean_copy=lambda p: clean[p],
+                                response=Response.RELOAD_CLEAN_COPY)
+    peer, p_events = sh.recover(rep)        # PEER_COPY, no disk at all
+    assert _equal_trees(peer.state(0), disk.state(0))
+    assert _equal_trees(peer.state(0), params)
+    assert all(e["action"] == "peer_copy" and e["donor"] == 1
+               for e in p_events)
+    assert all(e["action"] == "reload_clean_copy" for e in d_events)
+    # recovered replica scrubs clean (sidecar re-encoded over the gather)
+    _, rep2 = peer.scrub()
+    assert rep2.totals() == (0, 0)
+
+
+def test_all_replicas_flagged_falls_back_to_disk(params):
+    sh = ShardedMemoryDomain.protect(params, PAR_ALL(),
+                                     n_replicas=2, n_shards=2)
+    (path, plan), = _strike_plans(sh.shards[0][0], n=1)
+    sh = sh.apply_plan(path, plan, replica=0)
+    sh = sh.apply_plan(path, plan, replica=1)
+    sh, rep = sh.scrub()
+    assert set(rep.needs_recovery()) == {0, 1}
+    leaves = dict(zip(sh.order, jax.tree_util.tree_leaves(params)))
+    fixed, events = sh.recover(rep, clean_copy=lambda p: leaves[p])
+    assert all(e["action"] == "reload_clean_copy" for e in events)
+    assert _equal_trees(fixed.state(0), params)
+    assert _equal_trees(fixed.state(1), params)
+    # no donor and no disk copy -> restart is the only option left
+    with pytest.raises(RestartRequired):
+        sh.recover(rep)
+
+
+def test_sharded_retirement_uses_per_replica_block_keys(params):
+    """Escalated strikes retire the damaged 512-byte blocks under the
+    flagged replica's key — bytes 1040..1047 (packed word 130) land in
+    block 2, and only replica 0's bookkeeping moves."""
+    sh = ShardedMemoryDomain.protect(params, PAR_ALL(),
+                                     n_replicas=2, n_shards=2)
+    path = max(sh.paths(protected_only=True),
+               key=lambda p: np.asarray(sh.leaf(p)).nbytes)
+    plan = InjectionPlan(np.array([130], np.int32),
+                         np.array([3], np.int32), hard=False)
+    sh = sh.apply_plan(path, plan, replica=0)
+    sh, rep = sh.scrub()
+    strikes = {f"replica0/{path}": 2}
+    retirement = RetirementMap()
+    fixed, events = sh.recover(rep, strikes=strikes,
+                               retirement=retirement, retire_after=3)
+    assert [e["action"] for e in events] == ["peer_copy+retire"]
+    assert sorted(retirement.blocks[f"replica0/{path}"]) == [2]
+    assert retirement.count(f"replica1/{path}") == 0
+    assert _equal_trees(fixed.state(0), params)
+
+
+def test_inject_targets_one_replica(params):
+    sh = ShardedMemoryDomain.protect(params, typical_server(),
+                                     n_replicas=2, n_shards=2)
+    struck, events = sh.inject(np.random.default_rng(0), 5, replica=1)
+    assert len(events) == 5
+    assert all(e["replica"] == 1 for e in events)
+    assert _equal_trees(struck.state(0), params)   # replica 0 untouched
+    _, rep = struck.scrub()
+    assert sum(rep.replicas[0].totals()) == 0
+    assert sum(rep.replicas[1].totals()) >= 1
+
+
+# --------------------------------------------------- footprint accounting
+def test_stats_match_unsharded_logical_footprint(params):
+    single = MemoryDomain.protect(params, typical_server())
+    sh = ShardedMemoryDomain.protect(params, typical_server(),
+                                     n_replicas=2, n_shards=3)
+    st, ss = single.stats(), sh.stats()
+    assert ss.payload_bytes == st.payload_bytes
+    assert ss.n_leaves == st.n_leaves
+    assert ss.n_protected == st.n_protected
+    assert ss.region_bytes == st.region_bytes
+    prof = sh.region_profile()
+    assert abs(sum(prof.fractions.values()) - 1.0) < 1e-9
+    phys = sh.physical_stats()
+    assert phys["payload_bytes"] == 2 * st.payload_bytes
+    assert phys["n_replicas"] == 2 and phys["n_shards"] == 3
+
+
+# ------------------------------------------------ legacy shim deprecation
+def test_legacy_shims_emit_deprecation_warnings(params):
+    """scrubber.py / sidecar.py documented ``.. deprecated::`` for three
+    releases without ever warning — they must actually say so now."""
+    policy = typical_server()
+    with pytest.warns(DeprecationWarning, match="legacy per-leaf"):
+        sc = build_sidecar(params, policy)
+    with pytest.warns(DeprecationWarning, match="legacy per-leaf"):
+        scrub(params, sc, policy)
+    with pytest.warns(DeprecationWarning, match="legacy per-leaf"):
+        scr = Scrubber.create(params, policy)
+    # the shim warns once at entry, not per delegated call
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        scr.scrub_now(params)
+
+
+# ----------------------------------------------------- mesh-placed smoke
+@pytest.mark.slow
+def test_mesh_smoke_subprocess():
+    """Run the example on 8 forced host devices (fresh process: XLA_FLAGS
+    must precede the jax import)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "examples/sharded_domain.py"], env=env,
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr
+    assert "SHARDED SMOKE OK" in out.stdout
